@@ -1,0 +1,67 @@
+"""Shared benchmark plumbing: dataset suite, schemes, timing, result io."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def save_json(name: str, obj) -> pathlib.Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{name}.json"
+    p.write_text(json.dumps(obj, indent=1, default=float))
+    return p
+
+
+def load_json(name: str):
+    p = RESULTS / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def bench_suite(scale: float = 0.5, seed: int = 7):
+    """The paper's six datasets (regenerated in-kind, DESIGN.md §3)."""
+    from repro.core.generators import dataset_suite
+    return dataset_suite(scale=scale, seed=seed)
+
+
+def schemes(include_gorder: bool = False):
+    from repro.core.baselines import reordering_registry
+    reg = reordering_registry()
+    names = ["dbg", "sorder", "norder", "hubcluster", "lorder", "lorder-v2"]
+    if include_gorder:
+        names.append("gorder")
+    return {n: reg[n] for n in names}
+
+
+def time_call(fn, *args, repeats: int = 5, warmup: int = 1, **kw):
+    """(mean_seconds, std). Blocks on jax outputs."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.mean(ts)), float(np.std(ts))
+
+
+def geomean(xs) -> float:
+    xs = np.asarray([x for x in xs if x > 0], dtype=np.float64)
+    return float(np.exp(np.log(xs).mean())) if len(xs) else float("nan")
+
+
+def fmt_table(rows: list[dict], cols: list[str]) -> str:
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    head = " | ".join(c.ljust(widths[c]) for c in cols)
+    sep = "-|-".join("-" * widths[c] for c in cols)
+    body = "\n".join(" | ".join(str(r.get(c, "")).ljust(widths[c])
+                                for c in cols) for r in rows)
+    return f"{head}\n{sep}\n{body}"

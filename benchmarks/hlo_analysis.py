@@ -1,0 +1,5 @@
+"""Shim: the while-loop-aware HLO cost accounting lives in the package
+(repro.launch.hlo_analysis) so the dry-run can use it; benchmarks import
+it from here for backwards compatibility."""
+from repro.launch.hlo_analysis import *          # noqa: F401,F403
+from repro.launch.hlo_analysis import analyse_hlo  # noqa: F401

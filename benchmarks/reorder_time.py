@@ -1,0 +1,51 @@
+"""Paper Fig 5.2.1 — time to reorder each dataset with each scheme.
+
+Claim under test: DBG and SOrder (single traversal) reorder ~2× faster
+than NOrder and LOrder (double traversal); GOrder ≫ everything.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import bench_suite, fmt_table, save_json, schemes
+
+
+def run(scale: float = 0.5, include_gorder: bool = True,
+        gorder_cap: int = 1 << 15) -> list[dict]:
+    suite = bench_suite(scale)
+    sch = schemes()
+    rows = []
+    for dname, g in suite.items():
+        row = {"dataset": dname, "V": g.num_vertices, "E": g.num_edges}
+        for sname, fn in sch.items():
+            t0 = time.perf_counter()
+            fn(g)
+            row[sname] = round(time.perf_counter() - t0, 3)
+        if include_gorder and g.num_vertices <= gorder_cap:
+            from repro.core.baselines import gorder_order
+            t0 = time.perf_counter()
+            gorder_order(g, max_vertices=gorder_cap)
+            row["gorder"] = round(time.perf_counter() - t0, 3)
+        rows.append(row)
+        print(f"[reorder_time] {dname} done", flush=True)
+    save_json("reorder_time", rows)
+    return rows
+
+
+def main(scale: float = 0.5, include_gorder: bool = False):
+    # GOrder costs ~40 min/graph at this scale; the recorded full run
+    # (incl. GOrder) lives in results/reorder_time_gorder.json
+    rows = run(scale, include_gorder=include_gorder)
+    cols = ["dataset", "V", "E", "dbg", "sorder", "norder", "hubcluster",
+            "lorder", "lorder-v2", "gorder"]
+    print(fmt_table(rows, cols))
+    # claim check: single-traversal schemes faster than double-traversal
+    ok = sum(r["dbg"] <= r["lorder"] for r in rows)
+    print(f"\nDBG <= LOrder reorder time on {ok}/{len(rows)} datasets "
+          f"(paper: single- vs double-traversal)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""§Roofline — three-term roofline per (arch × shape × mesh) from the
+dry-run artifacts.
+
+Terms (seconds, per step, per chip — SPMD ⇒ every chip runs the same
+program):
+
+  compute    = flops_per_chip / PEAK_FLOPS
+  memory     = hbm_bytes_per_chip / HBM_BW
+  collective = collective_bytes_per_chip / ICI_BW
+
+Accounting: XLA's ``cost_analysis`` counts while bodies once, so scanned
+programs (scan-over-layers, microbatch accumulation, RWKV time scan)
+under-report by the trip count. We therefore re-derive all three terms
+from the optimized HLO with ``hlo_analysis.analyse_hlo`` (while-loop trip
+multiplication, fusion-level HBM accounting, collective payload summing)
+— stored per cell by the dry-run under ``hlo_terms``. Hardware: TPU v5e-
+class — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI (one shared ICI
+figure; we do not model per-axis topology).
+
+MODEL_FLOPS = 6·N·T (dense) or 6·N_active·T (MoE) with T = tokens per
+step; ratio MODEL_FLOPS / (flops_per_chip × chips) measures how much
+compiled compute is "useful" (catches remat/redundancy waste; > 1 would
+mean the compiler *saved* flops vs the analytic count, < 1/3 typically
+means remat or waste).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import fmt_table, save_json
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def tokens_per_step(shape: str) -> int:
+    return {
+        "train_4k": 4096 * 256,
+        "prefill_32k": 32_768 * 32,
+        "decode_32k": 128,       # one new token × batch
+        "long_500k": 1,
+    }[shape]
+
+
+def model_flops(arch: str, shape: str) -> float:
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    n = cfg.active_param_count()
+    t = tokens_per_step(shape)
+    mult = 6.0 if shape == "train_4k" else 2.0   # fwd+bwd vs fwd
+    return mult * n * t
+
+
+def min_bytes(arch: str, shape: str) -> float:
+    """Bandwidth-ideal floor: bytes that MUST move per step (global).
+
+    Decode is bandwidth-bound: every step reads the active params (bf16)
+    and the KV/state cache once. Train/prefill floors are param reads +
+    one activation residency (params dominate at these batch sizes)."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    params = 2.0 * cfg.active_param_count()          # bf16 reads
+    if shape in ("decode_32k", "long_500k"):
+        b = 128 if shape == "decode_32k" else 1
+        s = 32_768 if shape == "decode_32k" else 524_288
+        kv = 0.0
+        if any(x in ("attn", "shared_attn") for x in cfg.block_pattern):
+            n_attn = sum(x in ("attn", "shared_attn")
+                         for x in cfg.block_pattern)
+            t = min(s, cfg.window) if cfg.window else s
+            kv = n_attn * 2 * b * t * cfg.num_kv_heads * cfg.head_dim * 2
+        state = 0.0
+        if any(x in ("mamba", "rwkv") for x in cfg.block_pattern):
+            n_ssm = sum(x in ("mamba", "rwkv") for x in cfg.block_pattern)
+            per = (cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim
+                   if cfg.ssm_state else cfg.d_model * cfg.d_model //
+                   max(cfg.num_heads, 1))
+            state = n_ssm * b * per * 4
+        return params + kv + state
+    return params
+
+
+def load_cells(tag: str = "") -> list[dict]:
+    cells = []
+    for p in sorted(RESULTS_DIR.glob("*.json")):
+        rec = json.loads(p.read_text())
+        want_tag = rec.get("tag", "") == tag if "tag" in rec else \
+            (("_" + tag) in p.name if tag else
+             p.stem.count("_") <= 2 or p.stem.endswith(("pod1", "pod2")))
+        if "error" in rec or "skipped" in rec:
+            continue
+        if not want_tag:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def analyse_cell(rec: dict) -> dict:
+    chips = 1
+    for v in rec["mesh"].values():
+        chips *= v
+    # prefer while-aware HLO terms when the dry-run recorded them;
+    # fall back to cost_analysis numbers (legacy records)
+    ht = rec.get("hlo_terms")
+    if ht:
+        flops = ht["dot_flops"]
+        mem = ht["mem_bytes"]
+        coll = ht["collective_bytes"]
+    else:
+        flops = rec["flops"]
+        mem = rec["bytes_accessed"]
+        coll = rec["collectives"]["total_bytes"]
+    t_comp = flops / PEAK_FLOPS
+    t_mem = mem / HBM_BW
+    t_coll = coll / ICI_BW
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(flops * chips, 1.0)
+    bound = max(t_comp, t_mem, t_coll)
+    # roofline-ideal step time: compute floor OR the bandwidth floor,
+    # whichever binds (decode is bandwidth-bound — params+cache must move)
+    ideal = max(mf / (chips * PEAK_FLOPS),
+                min_bytes(rec["arch"], rec["shape"]) / (chips * HBM_BW))
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "x".join(str(v) for v in rec["mesh"].values()),
+        "chips": chips,
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "bottleneck": dom[0],
+        "model_flops": mf,
+        "useful_ratio": useful,
+        # fraction of the roofline-ideal step time actually achievable:
+        # ideal time (all chips at peak on useful flops) / bounded time
+        "roofline_frac": ideal / bound if bound > 0 else 0.0,
+        "fits_hbm": rec.get("temp_size_in_bytes", 0) is not None and
+                    (rec.get("temp_size_in_bytes", 0) +
+                     rec.get("argument_size_in_bytes", 0)) < 16e9,
+        "temp_gb": round((rec.get("temp_size_in_bytes") or 0) / 1e9, 1),
+    }
+
+
+def fmt_row(a: dict) -> dict:
+    return {
+        "arch": a["arch"], "shape": a["shape"], "mesh": a["mesh"],
+        "compute_ms": round(1e3 * a["compute_s"], 2),
+        "memory_ms": round(1e3 * a["memory_s"], 2),
+        "collective_ms": round(1e3 * a["collective_s"], 2),
+        "bottleneck": a["bottleneck"],
+        "useful": round(a["useful_ratio"], 2),
+        "roofline%": round(100 * a["roofline_frac"], 1),
+        "temp_gb": a["temp_gb"],
+        "fits": "y" if a["fits_hbm"] else "N",
+    }
+
+
+def main(tag: str = ""):
+    cells = load_cells(tag)
+    rows = [analyse_cell(c) for c in cells]
+    rows.sort(key=lambda r: (r["chips"], r["arch"], r["shape"]))
+    out = [fmt_row(r) for r in rows]
+    print(fmt_table(out, ["arch", "shape", "mesh", "compute_ms",
+                          "memory_ms", "collective_ms", "bottleneck",
+                          "useful", "roofline%", "temp_gb", "fits"]))
+    save_json("roofline" + (f"_{tag}" if tag else ""), rows)
+    worst = sorted((r for r in rows if r["mesh"].count("x") == 1),
+                   key=lambda r: r["roofline_frac"])[:5]
+    print("\nworst roofline fraction (single-pod):")
+    for r in worst:
+        print(f"  {r['arch']} {r['shape']}: {100 * r['roofline_frac']:.1f}% "
+              f"({r['bottleneck']}-bound)")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "")

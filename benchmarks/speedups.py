@@ -1,0 +1,146 @@
+"""Paper Fig 5.2.2 / 5.2.3 — processing speed-ups per (dataset × kernel ×
+scheme), plus per-kernel geometric means.
+
+Two speed-up metrics per cell (original layout = 1.0):
+
+* ``wall``  — measured JAX kernel wall-clock ratio on this host. Honest but
+  noisy at laptop scale (XLA overheads flatten cache effects).
+* ``cache`` — simulated LLC miss-count ratio on the property-access trace
+  (the mechanism the paper credits; deterministic and host-independent).
+  This is the primary reproduction metric; the cache model uses a
+  capacity scaled to the graph so the working set exceeds it, as the
+  paper's full-size graphs exceed a real LLC.
+
+Kernels: BFS, PR, CC, CC-SV, BC (the five plotted in Fig 5.2.2); SSSP is
+included for completeness (paper lists it in the setup).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import (bench_suite, fmt_table, geomean, save_json, schemes,
+                     time_call)
+
+KERNELS = ("bfs", "pr", "cc", "ccsv", "bc", "sssp")
+PLOT_KERNELS = ("bfs", "pr", "cc", "ccsv", "bc")
+
+
+def _cache_cfg(g):
+    """LLC sized so the property array is ~8× capacity (paper regime)."""
+    from repro.cache.sim import CacheConfig
+    prop_bytes = g.num_vertices * 4
+    size = max(8 * 1024, int(prop_bytes / 8))
+    return CacheConfig(size_bytes=size, ways=16, sample_rate=8)
+
+
+def _run_kernel(name, ga):
+    from repro.algos import kernels as K
+    fns = {
+        "bfs": lambda: K.bfs(ga, jnp.int32(0)),
+        "pr": lambda: K.pagerank(ga),
+        "cc": lambda: K.cc_labelprop(ga),
+        "ccsv": lambda: K.cc_shiloach_vishkin(ga),
+        "bc": lambda: K.bc(ga, sources=(0, 1)),
+        "sssp": lambda: K.sssp(ga, jnp.int32(0)),
+    }
+    return fns[name]
+
+
+def _tuned_lorder(g, cfg):
+    """The paper's protocol (Table 5.2): κ is chosen per dataset to
+    minimize post-reorder execution — swept here on the miss count."""
+    from repro.cache.sim import property_trace, simulate_misses
+    from repro.core.diameter import estimate_diameter
+    from repro.core.lorder import lorder
+    d = estimate_diameter(g)
+    best, best_m = None, None
+    for kappa in sorted({1, 2, max(1, d // 4), max(1, d // 2),
+                         max(1, (3 * d) // 4)}):
+        perm = np.asarray(lorder(g, kappa=int(kappa)))
+        m = simulate_misses(property_trace(g.apply_permutation(perm)),
+                            cfg)["misses"]
+        if best_m is None or m < best_m:
+            best, best_m = perm, m
+    return best
+
+
+def run(scale: float = 0.5, repeats: int = 5) -> list[dict]:
+    from repro.algos.graph_arrays import to_device
+    from repro.cache.sim import property_trace, simulate_misses
+
+    suite = bench_suite(scale)
+    sch = dict(schemes())
+    rows = []
+    for dname, g in suite.items():
+        cfg = _cache_cfg(g)
+        sch["lorder"] = lambda gg, _c=cfg: _tuned_lorder(gg, _c)
+        base_misses = simulate_misses(property_trace(g), cfg)["misses"]
+        ga = to_device(g)
+        base_wall = {k: time_call(_run_kernel(k, ga), repeats=repeats)[0]
+                     for k in KERNELS}
+        del ga
+        for sname, fn in sch.items():
+            perm = np.asarray(fn(g))
+            gp = g.apply_permutation(perm)
+            misses = simulate_misses(property_trace(gp), cfg)["misses"]
+            gpa = to_device(gp)
+            for k in KERNELS:
+                wall, _ = time_call(_run_kernel(k, gpa), repeats=repeats)
+                rows.append({
+                    "dataset": dname, "scheme": sname, "kernel": k,
+                    "wall_speedup": round(base_wall[k] / wall, 4),
+                    "cache_speedup": round(base_misses / max(misses, 1), 4),
+                })
+            del gpa
+            print(f"[speedups] {dname}/{sname} done", flush=True)
+    save_json("speedups", rows)
+    return rows
+
+
+def summarize(rows: list[dict], metric: str = "cache_speedup"):
+    """Fig 5.2.3 (geomeans) + the DBG/SOrder win-rate claims."""
+    datasets = sorted({r["dataset"] for r in rows})
+    sch = sorted({r["scheme"] for r in rows})
+    geo = []
+    for s in sch:
+        row = {"scheme": s}
+        for k in PLOT_KERNELS:
+            row[k] = round(geomean([r[metric] for r in rows
+                                    if r["scheme"] == s
+                                    and r["kernel"] == k]), 3)
+        geo.append(row)
+
+    def wins(a: str, b: str) -> tuple[int, int]:
+        w = t = 0
+        for d in datasets:
+            for k in PLOT_KERNELS:
+                ra = next(r[metric] for r in rows if r["dataset"] == d
+                          and r["kernel"] == k and r["scheme"] == a)
+                rb = next(r[metric] for r in rows if r["dataset"] == d
+                          and r["kernel"] == k and r["scheme"] == b)
+                t += 1
+                w += ra > rb
+        return w, t
+
+    w_dbg = wins("lorder", "dbg")
+    w_sorder = wins("lorder", "sorder")
+    return geo, {"lorder_beats_dbg": w_dbg, "lorder_beats_sorder": w_sorder}
+
+
+def main(scale: float = 0.5):
+    rows = run(scale)
+    for metric in ("cache_speedup", "wall_speedup"):
+        geo, claims = summarize(rows, metric)
+        print(f"\n=== geomean {metric} per kernel (Fig 5.2.3) ===")
+        print(fmt_table(geo, ["scheme", *PLOT_KERNELS]))
+        w, t = claims["lorder_beats_dbg"]
+        print(f"LOrder beats DBG  {w}/{t} ({100 * w / t:.0f}%; paper: 77%)")
+        w, t = claims["lorder_beats_sorder"]
+        print(f"LOrder beats SOrder {w}/{t} ({100 * w / t:.0f}%; paper: 60%)")
+        save_json(f"speedups_geomean_{metric}",
+                  {"geomean": geo, "claims": claims})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Device-side graph representation for the JAX graph kernels.
+
+A `GraphArrays` pytree mirrors the GAP benchmark's working set: out-CSR,
+in-CSR (transpose), COO views and degrees, all as jnp arrays. The six
+kernels (BFS, PR, BC, SSSP, CC, CC-SV) consume this structure; vertex
+relabeling (reordering) changes only the *content* of these arrays, never
+the kernel code — exactly the paper's contract.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.csr import Graph
+
+
+class GraphArrays(NamedTuple):
+    indptr: jnp.ndarray     # (V+1,) int32 out-CSR
+    indices: jnp.ndarray    # (E,)  int32 out-CSR neighbor (dst) ids
+    src: jnp.ndarray        # (E,)  int32 COO source per out-edge
+    t_indptr: jnp.ndarray   # (V+1,) int32 in-CSR
+    t_indices: jnp.ndarray  # (E,)  int32 in-CSR neighbor (src) ids
+    t_dst: jnp.ndarray      # (E,)  int32 COO dst per in-edge
+    out_degree: jnp.ndarray  # (V,) int32
+    in_degree: jnp.ndarray   # (V,) int32
+    weights: jnp.ndarray     # (E,) int32 edge weights aligned with out-CSR
+
+    @property
+    def num_vertices(self) -> int:
+        return self.indptr.shape[0] - 1
+
+    @property
+    def num_edges(self) -> int:
+        return self.indices.shape[0]
+
+
+def to_device(g: Graph, weight_seed: int = 17,
+              canonical_ids: np.ndarray | None = None) -> GraphArrays:
+    """Upload a host Graph; deterministic int weights in [1, 255] for SSSP.
+
+    Weights are a pure function of the *canonical edge identity*: by
+    default the graph's own (src, dst) ids, or — for a relabeled graph —
+    ``canonical_ids[v]`` giving each vertex's id in the original layout.
+    Passing the inverse permutation makes weights relabel-invariant, which
+    is what fair pre/post-reorder SSSP comparisons (and the equivariance
+    tests) require.
+    """
+    t = g.transpose
+    src = g.edge_src.astype(np.int64)
+    dst = g.indices.astype(np.int64)
+    h_src, h_dst = src, dst
+    if canonical_ids is not None:
+        canon = np.asarray(canonical_ids, dtype=np.int64)
+        h_src, h_dst = canon[src], canon[dst]
+    # splitmix-style hash of canonical (src, dst) -> stable per-edge weight
+    key = (h_src.astype(np.uint64) << np.uint64(32)) | h_dst.astype(np.uint64)
+    key = (key ^ (key >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    key = (key ^ (key >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    key ^= key >> np.uint64(31)
+    w = (key % np.uint64(255)).astype(np.int32) + 1
+    _ = weight_seed  # reserved; hash keeps weights relabel-invariant
+    return GraphArrays(
+        indptr=jnp.asarray(g.indptr, jnp.int32),
+        indices=jnp.asarray(g.indices, jnp.int32),
+        src=jnp.asarray(src, jnp.int32),
+        t_indptr=jnp.asarray(t.indptr, jnp.int32),
+        t_indices=jnp.asarray(t.indices, jnp.int32),
+        t_dst=jnp.asarray(t.edge_src, jnp.int32),
+        out_degree=jnp.asarray(g.out_degree, jnp.int32),
+        in_degree=jnp.asarray(g.in_degree, jnp.int32),
+        weights=jnp.asarray(w, jnp.int32),
+    )

@@ -1,0 +1,222 @@
+"""Comparison reordering schemes (paper §3): Sort, DBG, HubSort/HubCluster,
+SOrder, NOrder and (windowed-greedy) GOrder, plus identity/random controls.
+
+All schemes return ``perm`` with ``perm[old_id] = new_id``.
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from .csr import Graph
+from .traversal import bfs_order
+
+
+# --------------------------------------------------------------- controls
+def identity_order(g: Graph) -> np.ndarray:
+    return np.arange(g.num_vertices, dtype=np.int64)
+
+
+def random_order(g: Graph, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).permutation(g.num_vertices)
+
+
+# ------------------------------------------------------------------- Sort
+def sort_order(g: Graph) -> np.ndarray:
+    """Full sort by degree descending (stable)."""
+    by_deg = np.argsort(-g.degree.astype(np.int64), kind="stable")
+    perm = np.empty(g.num_vertices, dtype=np.int64)
+    perm[by_deg] = np.arange(g.num_vertices)
+    return perm
+
+
+# ------------------------------------------------------- HubSort / HubCluster
+def hubsort_order(g: Graph, hot_threshold: float | None = None) -> np.ndarray:
+    """Hot vertices first sorted by degree desc; cold keep original order."""
+    hot = g.hot_mask(hot_threshold)
+    hot_ids = np.nonzero(hot)[0]
+    hot_ids = hot_ids[np.argsort(-g.degree[hot_ids].astype(np.int64), kind="stable")]
+    cold_ids = np.nonzero(~hot)[0]
+    perm = np.empty(g.num_vertices, dtype=np.int64)
+    perm[np.concatenate([hot_ids, cold_ids])] = np.arange(g.num_vertices)
+    return perm
+
+
+def hubcluster_order(g: Graph, hot_threshold: float | None = None) -> np.ndarray:
+    """Hot vertices first (original relative order); cold after (ditto)."""
+    hot = g.hot_mask(hot_threshold)
+    perm = np.empty(g.num_vertices, dtype=np.int64)
+    perm[np.concatenate([np.nonzero(hot)[0], np.nonzero(~hot)[0]])] = \
+        np.arange(g.num_vertices)
+    return perm
+
+
+# -------------------------------------------------------------------- DBG
+def dbg_order(g: Graph, num_groups: int = 8) -> np.ndarray:
+    """Degree-Based Grouping (paper §3.5): power-law degree bins, vertices
+    keep original relative order within each bin; hotter bins get lower ids.
+
+    Bin boundaries follow the power law: avg·2^k for k = num_groups-2 … 0,
+    then the sub-average group.
+    """
+    deg = g.degree.astype(np.float64)
+    avg = max(g.average_degree, 1.0)
+    # group 0 = hottest. deg > avg*2^(G-2) -> 0, ..., deg > avg -> G-2, else G-1
+    thresholds = avg * (2.0 ** np.arange(num_groups - 2, -1, -1))
+    group = np.full(g.num_vertices, num_groups - 1, dtype=np.int64)
+    for gi, t in enumerate(thresholds):
+        group[(group == num_groups - 1) & (deg > t)] = gi
+    order = np.argsort(group, kind="stable")  # stable keeps original order
+    perm = np.empty(g.num_vertices, dtype=np.int64)
+    perm[order] = np.arange(g.num_vertices)
+    return perm
+
+
+# ----------------------------------------------------------------- SOrder
+def sorder_order(g: Graph, kappa: int = 2,
+                 hot_threshold: float | None = 50.0) -> np.ndarray:
+    """Structure-preserved reordering (paper §3.3).
+
+    Hypernode = κ-hop BFS aggregate of adjacent *cold* unvisited vertices
+    from a seed; emit hypernode members, then their hot neighbours, then
+    their cold neighbours. Paper evaluation uses λ=50, κ=2.
+    """
+    thr = g.average_degree if hot_threshold is None else hot_threshold
+    hot = g.degree > thr
+    n = g.num_vertices
+    assigned = np.zeros(n, dtype=bool)
+    pieces: list[np.ndarray] = []
+    for v in range(n):
+        if assigned[v]:
+            continue
+        if hot[v]:  # hot seeds form singleton hypernodes
+            assigned[v] = True
+            pieces.append(np.array([v], dtype=np.int64))
+            continue
+        # grow hypernode over cold unassigned vertices only
+        blocked = assigned | hot
+        blocked[v] = False
+        hyper = bfs_order(g, v, kappa, blocked)
+        assigned[hyper] = True
+        # neighbours of the hypernode, split hot-first
+        nbrs = np.unique(g.frontier_neighbors(hyper))
+        nbrs = nbrs[~assigned[nbrs]]
+        hn, cn = nbrs[hot[nbrs]], nbrs[~hot[nbrs]]
+        assigned[hn] = True
+        assigned[cn] = True
+        pieces.append(np.concatenate([hyper, hn, cn]))
+    order = np.concatenate(pieces)
+    perm = np.empty(n, dtype=np.int64)
+    perm[order] = np.arange(n)
+    return perm
+
+
+# ----------------------------------------------------------------- NOrder
+def norder_order(g: Graph, hot_threshold: float | None = None) -> np.ndarray:
+    """Neighbourhood reordering (paper §3.4): first sort vertices by hotness
+    descending; then BFS serially from each listed vertex (skipping visited);
+    new ids follow traversal order. Two full traversals => ~2x reorder time.
+    """
+    n = g.num_vertices
+    by_deg = np.argsort(-g.degree.astype(np.int64), kind="stable")
+    assigned = np.zeros(n, dtype=bool)
+    pieces: list[np.ndarray] = []
+    for v in by_deg:
+        if assigned[v]:
+            continue
+        pieces.append(bfs_order(g, int(v), None, assigned))
+    order = np.concatenate(pieces)
+    perm = np.empty(n, dtype=np.int64)
+    perm[order] = np.arange(n)
+    return perm
+
+
+# ----------------------------------------------------------------- GOrder
+def gorder_order(g: Graph, window: int = 8,
+                 max_vertices: int = 1 << 17) -> np.ndarray:
+    """Windowed-greedy GOrder (paper §3.2, Wei et al.).
+
+    Greedy maximisation of F(φ) = Σ_{0<φ(v)-φ(u)<=ω} S(u,v) with
+    S = #common in-neighbours + #direct edges, via a lazy-update max-heap.
+    Deliberately expensive — that is the paper's point — so guarded by
+    ``max_vertices``.
+    """
+    n = g.num_vertices
+    if n > max_vertices:
+        raise ValueError(f"GOrder guard: {n} > {max_vertices} vertices")
+    gt = g.transpose  # in-neighbours
+    und = g.undirected
+
+    score = np.zeros(n, dtype=np.float64)  # score vs current window
+    placed = np.zeros(n, dtype=bool)
+    heap: list[tuple[float, int]] = []
+
+    def bump(vs: np.ndarray, delta: float):
+        if len(vs) == 0:
+            return
+        np.add.at(score, vs, delta)
+        for v in np.unique(vs):
+            if not placed[v]:
+                heapq.heappush(heap, (-score[v], int(v)))
+
+    def contributions(v: int) -> np.ndarray:
+        """Vertices whose S(·,v) gets a +1 when v joins/leaves the window:
+        direct neighbours (sibling term S_n) and out-neighbours' other
+        in-neighbours (common in-neighbour term S_s)."""
+        direct = und.neighbors(v)
+        sibs = gt.frontier_neighbors(np.asarray(g.neighbors(v), dtype=np.int64))
+        return np.concatenate([direct, sibs])
+
+    start = int(np.argmax(g.degree))
+    order = np.empty(n, dtype=np.int64)
+    window_buf: list[int] = []
+    heapq.heappush(heap, (-0.0, start))
+    score[start] = 0.0
+    seq = iter(np.argsort(-g.degree.astype(np.int64), kind="stable"))
+
+    for pos in range(n):
+        v = None
+        while heap:
+            negs, cand = heapq.heappop(heap)
+            if placed[cand]:
+                continue
+            if -negs != score[cand]:
+                continue  # stale entry
+            v = cand
+            break
+        if v is None:  # disconnected remainder: next unplaced by degree
+            for cand in seq:
+                if not placed[cand]:
+                    v = int(cand)
+                    break
+        placed[v] = True
+        order[pos] = v
+        window_buf.append(v)
+        bump(contributions(v), +1.0)
+        if len(window_buf) > window:
+            old = window_buf.pop(0)
+            bump(contributions(old), -1.0)
+
+    perm = np.empty(n, dtype=np.int64)
+    perm[order] = np.arange(n)
+    return perm
+
+
+# ---------------------------------------------------------------- registry
+def reordering_registry() -> dict:
+    """name -> callable(graph, **kw) for the benchmark harness."""
+    from .lorder import lorder, lorder_v2
+    return {
+        "original": identity_order,
+        "random": random_order,
+        "sort": sort_order,
+        "hubsort": hubsort_order,
+        "hubcluster": hubcluster_order,
+        "dbg": dbg_order,
+        "sorder": sorder_order,
+        "norder": norder_order,
+        "gorder": gorder_order,
+        "lorder": lorder,
+        "lorder-v2": lorder_v2,
+    }

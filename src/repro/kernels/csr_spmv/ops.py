@@ -1,0 +1,39 @@
+"""Jit'd public wrapper for csr_spmv with backend dispatch.
+
+On CPU (this container) the Pallas path runs in ``interpret=True`` for
+validation and the XLA segment-sum path is the production fallback; on TPU
+``use_pallas=True`` compiles the real kernel.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from .csr_spmv import csr_spmv_pallas, pack_edges
+from .ref import csr_spmv_ref
+
+
+class SpMV:
+    """Pre-packed SpMV operator bound to one graph (in-CSR)."""
+
+    def __init__(self, t_indptr, t_indices, weights=None, *,
+                 use_pallas: bool | None = None, interpret: bool | None = None):
+        self.t_indptr = np.asarray(t_indptr)
+        self.t_indices = np.asarray(t_indices)
+        self.weights = weights
+        on_tpu = jax.default_backend() == "tpu"
+        self.use_pallas = on_tpu if use_pallas is None else use_pallas
+        self.interpret = (not on_tpu) if interpret is None else interpret
+        if self.use_pallas:
+            (self.src, self.dst_local, self.val, self.bpt, self.ntiles,
+             self.n_pad) = pack_edges(self.t_indptr, self.t_indices, weights)
+
+    def __call__(self, x):
+        if self.use_pallas:
+            return csr_spmv_pallas(
+                self.src, self.dst_local, self.val, x,
+                blocks_per_tile=self.bpt, num_tiles=self.ntiles,
+                n_pad=self.n_pad, interpret=self.interpret)
+        w = (np.ones(len(self.t_indices), np.float32)
+             if self.weights is None else self.weights)
+        return csr_spmv_ref(self.t_indptr, self.t_indices, w, x)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the csr_spmv kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def csr_spmv_ref(t_indptr, t_indices, weights, x):
+    """y[v] = Σ_{u→v} w(u,v)·x[u] over the in-CSR arrays."""
+    n = t_indptr.shape[0] - 1
+    dst = jnp.repeat(jnp.arange(n, dtype=jnp.int32), jnp.diff(t_indptr),
+                     total_repeat_length=t_indices.shape[0])
+    vals = x[t_indices] * weights
+    return jax.ops.segment_sum(vals, dst, num_segments=n)

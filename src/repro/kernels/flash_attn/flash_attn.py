@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: blocked causal (optionally sliding-window) attention.
+
+Substrate kernel for the 32k-prefill cells. Q is tiled over the grid; K/V
+for the (batch, head) arrive as whole-sequence VMEM blocks and are walked
+with an in-kernel fori_loop over key tiles using the online-softmax
+recurrence (running max / normalizer). Sliding-window masking covers the
+Mixtral SWA path. Production note: for >32k sequences the key walk moves to
+a third grid dimension with VMEM double-buffering; the recurrence is
+unchanged.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Q_TILE = 256
+K_TILE = 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float, window: int,
+            seq_len: int):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * sm_scale          # (Q_TILE, d)
+    q_pos = qi * Q_TILE + jax.lax.iota(jnp.int32, Q_TILE)
+
+    def step(t, carry):
+        acc, m_prev, l_prev = carry
+        k = k_ref[0, pl.dslice(t * K_TILE, K_TILE), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(t * K_TILE, K_TILE), :].astype(jnp.float32)
+        s = q @ k.T                                      # (Q_TILE, K_TILE)
+        k_pos = t * K_TILE + jax.lax.iota(jnp.int32, K_TILE)
+        mask = q_pos[:, None] >= k_pos[None, :]          # causal
+        if window > 0:                                   # sliding window
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    d = q_ref.shape[-1]
+    acc0 = jnp.zeros((Q_TILE, d), jnp.float32)
+    m0 = jnp.full((Q_TILE,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((Q_TILE,), jnp.float32)
+    # causal: key tiles beyond the diagonal contribute nothing — skip them
+    num_kt = (qi + 1) * Q_TILE // K_TILE
+    acc, _, l = jax.lax.fori_loop(0, num_kt, step, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sm_scale", "window", "interpret"))
+def flash_attention_pallas(q, k, v, *, sm_scale: float | None = None,
+                           window: int = 0, interpret: bool = True):
+    """q,k,v: (BH, S, d) with S % max(Q_TILE,K_TILE) == 0; causal."""
+    bh, s, d = q.shape
+    assert s % Q_TILE == 0 and s % K_TILE == 0
+    scale = (d ** -0.5) if sm_scale is None else sm_scale
+    grid = (bh, s // Q_TILE)
+    return pl.pallas_call(
+        functools.partial(_kernel, sm_scale=scale, window=window, seq_len=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q_TILE, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q_TILE, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,19 @@
+"""Attention wrapper with backend dispatch (Pallas on TPU, XLA elsewhere)."""
+from __future__ import annotations
+
+import jax
+
+from .flash_attn import Q_TILE, flash_attention_pallas
+from .ref import attention_ref
+
+
+def causal_attention(q, k, v, *, sm_scale=None, window: int = 0,
+                     use_pallas: bool | None = None,
+                     interpret: bool | None = None):
+    on_tpu = jax.default_backend() == "tpu"
+    use_pallas = on_tpu if use_pallas is None else use_pallas
+    interpret = (not on_tpu) if interpret is None else interpret
+    if use_pallas and q.shape[1] % Q_TILE == 0:
+        return flash_attention_pallas(q, k, v, sm_scale=sm_scale,
+                                      window=window, interpret=interpret)
+    return attention_ref(q, k, v, sm_scale=sm_scale, window=window)

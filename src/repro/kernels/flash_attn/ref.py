@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for blocked causal/SWA attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, sm_scale: float | None = None, window: int = 0):
+    """q,k,v: (BH, S, d); causal; optional sliding window."""
+    bh, s, d = q.shape
+    scale = (d ** -0.5) if sm_scale is None else sm_scale
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask[None], logits, -1e30)
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: hot/cold split embedding gather.
+
+Payoff path of the vocab-LOrder feature (DESIGN.md §3.3): after reordering,
+the hot vocabulary is a contiguous low-id slab. The kernel keeps that slab
+VMEM-resident and serves hot lookups from it; cold lookups (rare, Zipf
+tail) are masked out and served by a standard XLA gather in the wrapper.
+Grid walks id blocks; the hot slab block is reused across all grid steps
+(constant index_map) so it stays pinned in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ID_BLOCK = 512
+
+
+def _kernel(ids_ref, slab_ref, out_ref, *, hot_size: int):
+    ids = ids_ref[...]
+    is_hot = ids < hot_size
+    safe = jnp.where(is_hot, ids, 0)
+    rows = jnp.take(slab_ref[...], safe, axis=0)
+    out_ref[...] = jnp.where(is_hot[:, None], rows, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hot_gather_pallas(ids, hot_slab, *, interpret: bool = True):
+    """ids (B,) int32; hot_slab (H, D). Returns (B, D): rows for hot ids,
+    zeros for cold ids (caller overlays the cold gather)."""
+    b = ids.shape[0]
+    h, d = hot_slab.shape
+    assert b % ID_BLOCK == 0
+    grid = (b // ID_BLOCK,)
+    return pl.pallas_call(
+        functools.partial(_kernel, hot_size=h),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ID_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((h, d), lambda i: (0, 0)),   # pinned hot slab
+        ],
+        out_specs=pl.BlockSpec((ID_BLOCK, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), hot_slab.dtype),
+        interpret=interpret,
+    )(ids, hot_slab)

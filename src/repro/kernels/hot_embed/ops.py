@@ -1,0 +1,34 @@
+"""Hot/cold embedding lookup: Pallas hot path + XLA cold overlay."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .hot_embed import ID_BLOCK, hot_gather_pallas
+from .ref import embed_ref, hot_gather_ref
+
+
+def hot_cold_lookup(ids, table, hot_size: int, *,
+                    use_pallas: bool | None = None,
+                    interpret: bool | None = None):
+    """Embedding lookup where rows [0, hot_size) are served from the
+    VMEM-resident hot slab and the Zipf tail from HBM."""
+    on_tpu = jax.default_backend() == "tpu"
+    use_pallas = on_tpu if use_pallas is None else use_pallas
+    interpret = (not on_tpu) if interpret is None else interpret
+    flat = ids.reshape(-1)
+    pad = (-flat.shape[0]) % ID_BLOCK
+    padded = jnp.pad(flat, (0, pad))
+    if use_pallas:
+        hot_rows = hot_gather_pallas(padded, table[:hot_size],
+                                     interpret=interpret)
+    else:
+        hot_rows = hot_gather_ref(padded, table[:hot_size])
+    is_cold = padded >= hot_size
+    cold_rows = jnp.where(
+        is_cold[:, None],
+        jnp.take(table, jnp.where(is_cold, padded, hot_size), axis=0,
+                 mode="clip"),
+        0.0)
+    out = (hot_rows + cold_rows)[: flat.shape[0]]
+    return out.reshape(*ids.shape, table.shape[1])

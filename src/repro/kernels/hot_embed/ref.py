@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the hot/cold embedding gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embed_ref(ids, table):
+    return jnp.take(table, ids, axis=0)
+
+
+def hot_gather_ref(ids, hot_slab):
+    """Hot rows for ids < H, zeros otherwise (kernel contract)."""
+    h = hot_slab.shape[0]
+    is_hot = ids < h
+    rows = jnp.take(hot_slab, jnp.where(is_hot, ids, 0), axis=0)
+    return jnp.where(is_hot[:, None], rows, 0.0)

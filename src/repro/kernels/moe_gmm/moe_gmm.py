@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: grouped matmul over locality-sorted MoE tokens.
+
+LOrder's mechanism — sort skew-accessed items so hot groups are contiguous
+— applied to expert dispatch (DESIGN.md §3.2): tokens are pre-sorted by
+expert id and groups padded to the row-tile size, so every (row-tile,
+col-tile) grid step multiplies one contiguous token block by exactly one
+expert's weights. The expert id per row tile arrives via scalar prefetch
+and indexes the weight BlockSpec, i.e. expert weights stream HBM→VMEM once
+per contiguous group instead of once per token — the MXU analogue of a
+cache line served from the hot slab.
+
+Grid: (num_row_tiles, num_col_tiles, num_k_tiles); f32 accumulation in the
+output tile across the k dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _kernel(tile_expert_ref, x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[0],
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gmm_pallas(x, w, tile_expert, *, interpret: bool = True):
+    """x: (M, K) tokens sorted+padded by expert; w: (E, K, N);
+    tile_expert: (M//TILE_M,) expert id per row tile."""
+    m, kdim = x.shape
+    e, _, n = w.shape
+    assert m % TILE_M == 0 and kdim % TILE_K == 0 and n % TILE_N == 0
+    grid = (m // TILE_M, n // TILE_N, kdim // TILE_K)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((TILE_M, TILE_K), lambda i, j, k, te: (i, k)),
+                pl.BlockSpec((1, TILE_K, TILE_N),
+                             lambda i, j, k, te: (te[i], k, j)),
+            ],
+            out_specs=pl.BlockSpec((TILE_M, TILE_N),
+                                   lambda i, j, k, te: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(tile_expert, x, w)
+
+
+def pad_groups(group_sizes: np.ndarray, tile_m: int = TILE_M):
+    """Host helper: per-group padded offsets + per-tile expert map.
+
+    Returns (padded_offsets (E+1,), tile_expert (T,), total_rows)."""
+    padded = -(-group_sizes // tile_m) * tile_m
+    padded = np.maximum(padded, 0)
+    offs = np.zeros(len(group_sizes) + 1, np.int64)
+    np.cumsum(padded, out=offs[1:])
+    tile_expert = np.repeat(np.arange(len(group_sizes), dtype=np.int32),
+                            padded // tile_m)
+    if len(tile_expert) == 0:  # degenerate: no tokens at all
+        tile_expert = np.zeros(1, np.int32)
+        offs[1:] = tile_m
+    return offs, tile_expert, int(offs[-1])

@@ -1,0 +1,22 @@
+"""Public grouped-matmul wrapper with backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .moe_gmm import TILE_M, gmm_pallas, pad_groups
+from .ref import gmm_ref
+
+
+def grouped_matmul(x, w, tile_expert, *, use_pallas: bool | None = None,
+                   interpret: bool | None = None):
+    """x (M,K) expert-sorted rows (M multiple of TILE_M), w (E,K,N),
+    tile_expert (M//TILE_M,)."""
+    on_tpu = jax.default_backend() == "tpu"
+    use_pallas = on_tpu if use_pallas is None else use_pallas
+    interpret = (not on_tpu) if interpret is None else interpret
+    if use_pallas:
+        return gmm_pallas(x, w, tile_expert, interpret=interpret)
+    row_expert = jnp.repeat(tile_expert, TILE_M)
+    return gmm_ref(x, w, row_expert)

@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, without allocating any real arrays:
+  * compiled.memory_analysis()  — proves the cell fits per-device HBM;
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for §Roofline;
+  * collective_bytes            — parsed from the optimized HLO, summed
+    over all-reduce / all-gather / reduce-scatter / all-to-all /
+    collective-permute ops (async *-start counted once, *-done skipped).
+
+Results append to benchmarks/results/dryrun/<cell>.json, consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--single-pod]
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] \
+    / "benchmarks" / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Total payload bytes + op counts per collective kind."""
+    out: dict = {"total_bytes": 0}
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind, _ = m.groups()
+        b = _shape_bytes(type_str)
+        out[kind] = out.get(kind, {"count": 0, "bytes": 0})
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+        out["total_bytes"] += b
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh, extra: dict | None = None,
+               microbatch: int | None = None):
+    """Lower one cell. Returns (lowered, compiled, meta)."""
+    from ..configs import get_config
+    from ..configs.shapes import SHAPES, cell_supported, input_specs
+    from ..launch.shardings import batch_specs, to_named
+    from ..models.transformer import init_params
+    from ..train.optim import TrainConfig, init_opt_state
+    from ..train.steps import make_forward, make_serve_step, make_train_step
+
+    cfg = get_config(arch)
+    if extra:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **extra)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        return None, None, {"skipped": reason}
+
+    specs = input_specs(cfg, shape)
+    params_shape = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    if shape.kind in ("prefill", "decode"):
+        # inference serves bf16 weights (float32 masters are a training
+        # artifact); halves weight reads and makes replicated-over-data
+        # serving layouts fit HBM
+        params_shape = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32
+                else s.dtype), params_shape)
+
+    with mesh:
+        if shape.kind == "train":
+            # default: 4-way gradient accumulation so train cells fit v5e
+            # HBM (16 GB) — per-device microbatch = 64/|dp| = 4 sequences.
+            mb = 64 if microbatch is None else microbatch
+            tc = TrainConfig(microbatch=mb if mb > 0 else 0)
+            step, pspecs = make_train_step(cfg, tc, mesh)
+            opt_shape = jax.eval_shape(
+                lambda: init_opt_state(params_shape))
+            lowered = step.lower(params_shape, opt_shape, specs)
+        elif shape.kind == "prefill":
+            fwd, pspecs = make_forward(cfg, mesh)
+            lowered = fwd.lower(params_shape, specs)
+        else:  # decode
+            step, pspecs, cspecs = make_serve_step(
+                cfg, mesh, shape.global_batch, shape.seq_len)
+            lowered = step.lower(params_shape, specs["cache"],
+                                 specs["tokens"])
+        compiled = lowered.compile()
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "kind": shape.kind}
+    return lowered, compiled, meta
+
+
+def analyse(lowered, compiled, meta: dict) -> dict:
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    rec = dict(meta)
+    rec["flops"] = float(cost.get("flops", -1.0))
+    rec["bytes_accessed"] = float(cost.get("bytes accessed", -1.0))
+    rec["collectives"] = coll
+    # while-loop-aware accounting (scan bodies × trip counts) — the
+    # roofline's primary source; cost_analysis kept for cross-checking
+    from .hlo_analysis import analyse_hlo
+    ht = analyse_hlo(hlo)
+    rec["hlo_terms"] = {
+        "dot_flops": ht["dot_flops"],
+        "mem_bytes": ht["mem_bytes"],
+        "collective_bytes": ht["collective_bytes"],
+        "collectives_by_kind": ht["collectives_by_kind"],
+    }
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        rec[k] = getattr(mem, k, None)
+    # count remat-style duplication: fusion instruction count as proxy
+    rec["hlo_bytes"] = len(hlo)
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             extra: dict | None = None, tag: str = "",
+             microbatch: int | None = None, reraise: bool = True) -> dict:
+    from .mesh import make_production_mesh
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        lowered, compiled, meta = build_cell(arch, shape_name, mesh, extra,
+                                             microbatch=microbatch)
+    except Exception as e:  # a failed cell is a bug: record it loudly
+        rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+               "error": f"{type(e).__name__}: {e}"[:2000]}
+        _save(rec, tag)
+        if reraise:
+            raise
+        return rec
+    if lowered is None:
+        rec = dict(meta, arch=arch, shape=shape_name, multi_pod=multi_pod)
+    else:
+        rec = analyse(lowered, compiled, meta)
+        rec["multi_pod"] = multi_pod
+        rec["compile_seconds"] = round(time.time() - t0, 1)
+    _save(rec, tag)
+    return rec
+
+
+def _save(rec: dict, tag: str = ""):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    pod = "pod2" if rec.get("multi_pod") else "pod1"
+    name = f"{rec['arch']}_{rec['shape']}_{pod}{('_' + tag) if tag else ''}.json"
+    (RESULTS_DIR / name).write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from ..configs import ARCH_IDS
+    from ..configs.shapes import SHAPES
+
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    sweep = args.all or len(archs) * len(shapes) * len(meshes) > 1
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                if args.skip_existing:
+                    pod = "pod2" if mp else "pod1"
+                    tag = ("_" + args.tag) if args.tag else ""
+                    f = RESULTS_DIR / f"{arch}_{shape}_{pod}{tag}.json"
+                    if f.exists() and "error" not in json.loads(f.read_text()):
+                        print(f"HAVE {arch} {shape} {pod}", flush=True)
+                        continue
+                rec = run_cell(arch, shape, mp, tag=args.tag,
+                               microbatch=args.microbatch,
+                               reraise=not sweep)
+                if "error" in rec:
+                    print(f"FAIL {arch} {shape} pod{2 if mp else 1}: "
+                          f"{rec['error'][:200]}", flush=True)
+                elif "skipped" in rec:
+                    print(f"SKIP {arch} {shape} pod{2 if mp else 1}: "
+                          f"{rec['skipped']}", flush=True)
+                else:
+                    coll = rec["collectives"]["total_bytes"]
+                    print(f"OK {arch} {shape} pod{2 if mp else 1} "
+                          f"flops={rec['flops']:.3e} "
+                          f"coll={coll:.3e}B "
+                          f"temp={rec['temp_size_in_bytes']} "
+                          f"t={rec['compile_seconds']}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,293 @@
+"""While-loop-aware cost accounting over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**,
+so scan-over-layers programs (and scan-over-time RWKV, chunked-loss scans)
+under-report FLOPs, bytes and collective payloads by the trip count.
+This module re-derives the three roofline terms from the HLO text itself:
+
+* ``dot`` FLOPs = 2 · |output| · |contracted dims|  (from shapes + attrs);
+* HBM bytes     = Σ over top-level instructions of operand+output bytes
+  for memory-moving ops (fusions are the HBM-traffic unit on TPU; pure
+  reshapes/bitcasts/tuples are free);
+* collective bytes = output payloads of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute;
+
+with every ``while`` body multiplied by its trip count (parsed from the
+condition computation's loop bound; nested whiles multiply). Validated
+against cost_analysis on unrolled control programs in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^)]*\)\s*->", re.M)
+_INSTR = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\(.*?\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+    r"([a-z0-9\-]+)\((.*)$")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# Whitelist of ops whose operands+outputs are real HBM traffic. On TPU,
+# elementwise chains fuse into their producers; the host-CPU HLO we lower
+# leaves them standalone, so counting every op would overstate the memory
+# term several-fold. Fusions are the traffic unit; dot/gather/scatter/DUS
+# appear unfused and move their operands; everything else is treated as
+# fused-away (a *lower*-bound bias that offsets the CPU-HLO inflation).
+_MEM_OPS = {"fusion", "dot", "gather", "scatter", "dynamic-slice",
+            "dynamic-update-slice", "convolution", "sort", "copy",
+            "concatenate", "reduce", "reduce-window", "select-and-scatter"}
+
+
+def _shape_elems(dt: str, dims: str) -> tuple[int, int]:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n, n * _DTYPE_BYTES.get(dt, 0)
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_shape_elems(dt, dims)[1]
+               for dt, dims in _SHAPE_RE.findall(type_str))
+
+
+def _type_elems(type_str: str) -> int:
+    return sum(_shape_elems(dt, dims)[0]
+               for dt, dims in _SHAPE_RE.findall(type_str))
+
+
+@dataclasses.dataclass
+class CompCost:
+    dot_flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    calls: list = dataclasses.field(default_factory=list)  # (kind, comp, extra)
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """Header = top-level line ending in '{' containing '->' (params may be
+    nested tuples, so we only trust the name token before the first '(')."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        is_header = (line and not line[0].isspace() and
+                     stripped.endswith("{") and "->" in stripped and
+                     "(" in stripped)
+        if is_header:
+            head = stripped.split("(", 1)[0].strip()
+            head = head.replace("ENTRY", "").strip().lstrip("%")
+            if head:
+                cur = head
+                comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _dot_flops(result_type: str, line: str, types: dict[str, str]) -> float:
+    out_elems = _type_elems(result_type)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    ops = re.findall(r"%([\w\.\-]+)", line.split("(", 1)[1])
+    if not ops:
+        return 0.0
+    lhs_type = types.get(ops[0], "")
+    shapes = _SHAPE_RE.findall(lhs_type)
+    if not shapes:
+        return 0.0
+    dims = [int(d) for d in shapes[0][1].split(",") if d]
+    contract = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(dims):
+                contract *= dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _operand_names(line: str) -> list[str]:
+    args = line.split("(", 1)[1]
+    args = args.split("),", 1)[0]
+    return re.findall(r"%([\w\.\-]+)", args)
+
+
+def _instr_operand_bytes(line: str, types: dict[str, str]) -> int:
+    return sum(_type_bytes(types.get(op, ""))
+               for op in _operand_names(line))
+
+
+_TRIP_RE = [
+    re.compile(r"compare\(.*\)\s*,\s*direction=LT"),
+]
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Loop bound from the condition computation (max int constant)."""
+    best = 1
+    for line in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def analyse_hlo(hlo: str) -> dict:
+    comps = _split_computations(hlo)
+    types_per_comp: dict[str, dict[str, str]] = {}
+    costs: dict[str, CompCost] = {}
+
+    # pre-pass: fusions whose root is a dynamic-update-slice write only the
+    # update region (the output buffer is aliased) — e.g. the scan-carry
+    # stacking fusion, which would otherwise charge the full 36-layer stack
+    # per layer iteration
+    dus_roots: set[str] = set()
+    ds_comps: set[str] = set()
+    for cname, lines in comps.items():
+        for line in lines:
+            s = line.strip()
+            # any DUS inside the fusion ⇒ its big buffer is aliased
+            # in-place (scan-carry / remat-stack update); root may be a
+            # tuple for multi-output fusions
+            if " dynamic-update-slice(" in s:
+                dus_roots.add(cname)
+            if " dynamic-slice(" in s:
+                ds_comps.add(cname)
+
+    # first pass: per-computation direct costs + call edges
+    for cname, lines in comps.items():
+        types: dict[str, str] = {}
+        # parameters: declared inline in body as %name = TYPE parameter(i)
+        cost = CompCost()
+        for line in lines:
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            name, rtype, op, rest = m.groups()
+            types[name] = rtype
+            if op == "while":
+                cm = re.search(r"condition=%?([\w\.\-]+)", line)
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                # XLA records its analyzed loop bound on the instruction
+                tm_ = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+                trip = int(tm_.group(1)) if tm_ else None
+                if cm and bm:
+                    cost.calls.append(("while", bm.group(1),
+                                       (cm.group(1), trip)))
+                continue
+            if op in ("call", "fusion", "conditional", "custom-call"):
+                for target in re.findall(
+                        r"(?:to_apply|calls|branch_computations=\{)[=%]*%?([\w\.\-]+)",
+                        line):
+                    cost.calls.append(("call", target, None))
+            if op == "dot":
+                cost.dot_flops += _dot_flops(rtype, line, types)
+            if op in COLLECTIVES or (op.endswith("-start")
+                                     and op[:-6] in COLLECTIVES):
+                kind = op[:-6] if op.endswith("-start") else op
+                b = _type_bytes(rtype)
+                cost.coll_bytes += b
+                d = cost.coll_by_kind.setdefault(kind, {"count": 0, "bytes": 0})
+                d["count"] += 1
+                d["bytes"] += b
+            if op in _MEM_OPS and not op.endswith("-done"):
+                if op in ("gather", "dynamic-slice"):
+                    # reads only the gathered/sliced slab, writes it once —
+                    # counting the full operand would charge a scanned
+                    # layer-stack 36× per step
+                    cost.mem_bytes += 2 * _type_bytes(rtype)
+                elif op in ("dynamic-update-slice", "scatter"):
+                    # reads + writes the update region (buffer is aliased)
+                    ops_ = _operand_names(line)
+                    upd = types.get(ops_[1], "") if len(ops_) > 1 else rtype
+                    cost.mem_bytes += 2 * _type_bytes(upd)
+                elif op == "fusion":
+                    tgt = re.search(r"calls=%?([\w\.\-]+)", line)
+                    out_b = _type_bytes(rtype)
+                    opb = [_type_bytes(types.get(o, ""))
+                           for o in _operand_names(line)]
+                    tname = tgt.group(1) if tgt else ""
+                    if tname in dus_roots and opb:
+                        # in-place carry update: traffic ≈ the non-carry
+                        # operands read + written once (exclude the aliased
+                        # full-buffer operand)
+                        cost.mem_bytes += 2 * (sum(opb) - max(opb))
+                    elif tname in ds_comps:
+                        # fusion dynamic-slices its big operands (scan-input
+                        # reads): each slice read is output-sized, not the
+                        # full stacked buffer
+                        cost.mem_bytes += out_b + sum(
+                            min(b, max(out_b, 1)) for b in opb)
+                    else:
+                        cost.mem_bytes += out_b + sum(opb)
+                else:
+                    cost.mem_bytes += _type_bytes(rtype) \
+                        + _instr_operand_bytes(line, types)
+        types_per_comp[cname] = types
+        costs[cname] = cost
+
+    # fusion computations: their internals are NOT HBM traffic; the fusion
+    # instruction's operands/outputs (counted above) are. So drop call
+    # edges into fused computations for mem, but keep dot flops/collectives.
+    memo: dict[str, tuple] = {}
+
+    def total(cname: str, for_mem: bool) -> tuple:
+        key = (cname, for_mem)
+        if key in memo:
+            return memo[key]
+        memo[key] = (0.0, 0.0, 0.0, {})  # cycle guard
+        c = costs.get(cname)
+        if c is None:
+            return 0.0, 0.0, 0.0, {}
+        flops, mem, coll = c.dot_flops, c.mem_bytes, c.coll_bytes
+        by_kind = {k: dict(v) for k, v in c.coll_by_kind.items()}
+        for kind, target, cond in c.calls:
+            mult = 1
+            if kind == "while":
+                cond_name, trip = cond if isinstance(cond, tuple) \
+                    else (cond, None)
+                if trip is not None:
+                    mult = trip
+                elif cond_name in comps:
+                    mult = _trip_count(comps[cond_name])
+            tf, tm, tc, tbk = total(target, for_mem)
+            flops += mult * tf
+            coll += mult * tc
+            if kind == "while":
+                mem += mult * tm
+            # 'call'/fusion body mem excluded: fusion op already counted
+            for k, v in tbk.items():
+                d = by_kind.setdefault(k, {"count": 0, "bytes": 0})
+                d["count"] += mult * v["count"]
+                d["bytes"] += mult * v["bytes"]
+        memo[key] = (flops, mem, coll, by_kind)
+        return memo[key]
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY") and "(" in line:
+            entry = line.split("(", 1)[0].replace(
+                "ENTRY", "").strip().lstrip("%")
+            break
+    if entry is None or entry not in costs:
+        entry = max(costs, key=lambda c: len(comps[c]))
+
+    flops, mem, coll, by_kind = total(entry, True)
+    return {
+        "dot_flops": flops,
+        "mem_bytes": mem,
+        "collective_bytes": coll,
+        "collectives_by_kind": by_kind,
+        "entry": entry,
+        "num_computations": len(comps),
+    }

@@ -1,0 +1,22 @@
+"""Production mesh builders (functions — importing never touches jax
+device state; jax is only queried when a mesh is actually constructed)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh():
+    """Degenerate 1×1 mesh on whatever single device is present (tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, min(n, 1)), ("data", "model"))

@@ -1,0 +1,236 @@
+"""Sharding rules: param/activation/cache PartitionSpecs per architecture.
+
+Scheme (DESIGN.md §5): megatron-style tensor parallelism on the ``model``
+axis (attention heads / ffn hidden / vocab), ZeRO-3-style FSDP on the
+``data`` axis (params+opt state sharded, gathered per layer by GSPMD),
+pure replication across ``pod`` for params (cross-pod traffic = gradient
+all-reduce only — the hierarchical-bandwidth-friendly layout).
+
+Dims that do not divide the axis size fall back to replication
+(`_maybe`): e.g. rwkv6's 40 wkv-heads or paligemma's MQA kv=1.
+"""
+from __future__ import annotations
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+DP_AXES = ("pod", "data")
+
+
+def _axsize(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape.get(a, 1)
+        return out
+    return mesh.shape.get(axis, 1)
+
+
+def _maybe(mesh: Mesh, dim: int, axis):
+    """axis if it divides dim (and exists in the mesh), else None."""
+    n = _axsize(mesh, axis)
+    return axis if (n > 1 and dim % n == 0) else None
+
+
+def dp_axes(mesh: Mesh):
+    axes = tuple(a for a in DP_AXES if a in mesh.axis_names)
+    return axes if axes else (None,)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, serve: bool = False):
+    """PartitionSpec tree mirroring init_params(cfg).
+
+    ``serve=True`` drops the ZeRO/FSDP data-axis sharding (§Perf iteration
+    5): training wants params sharded over `data` (optimizer state scales),
+    but decode re-gathers those shards EVERY layer EVERY token — the
+    serving layout keeps weights TP-sharded over `model` only, replicated
+    across `data` (weights are read-only at inference)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    hd, nh, nkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    mdl, dat = "model", (None if serve else "data")
+    L = None  # scanned leading layer dim: never sharded
+
+    def attn_spec(scanned: bool):
+        lead = (L,) if scanned else ()
+        s = {
+            "wq": P(*lead, _maybe(mesh, d, dat), _maybe(mesh, nh * hd, mdl)),
+            "wk": P(*lead, _maybe(mesh, d, dat), _maybe(mesh, nkv * hd, mdl)),
+            "wv": P(*lead, _maybe(mesh, d, dat), _maybe(mesh, nkv * hd, mdl)),
+            "wo": P(*lead, _maybe(mesh, nh * hd, mdl), _maybe(mesh, d, dat)),
+        }
+        if cfg.qkv_bias:
+            s["bq"] = P(*lead, _maybe(mesh, nh * hd, mdl))
+            s["bk"] = P(*lead, _maybe(mesh, nkv * hd, mdl))
+            s["bv"] = P(*lead, _maybe(mesh, nkv * hd, mdl))
+        if cfg.attn_out_bias:
+            s["bo"] = P(*lead, None)
+        return s
+
+    def mlp_spec(scanned: bool):
+        lead = (L,) if scanned else ()
+        if cfg.mlp_type == "swiglu":
+            s = {"w_gate": P(*lead, _maybe(mesh, d, dat), _maybe(mesh, f, mdl)),
+                 "w_up": P(*lead, _maybe(mesh, d, dat), _maybe(mesh, f, mdl)),
+                 "w_down": P(*lead, _maybe(mesh, f, mdl), _maybe(mesh, d, dat))}
+        else:
+            s = {"w_in": P(*lead, _maybe(mesh, d, dat), _maybe(mesh, f, mdl)),
+                 "w_out": P(*lead, _maybe(mesh, f, mdl), _maybe(mesh, d, dat))}
+            if cfg.mlp_bias:
+                s["b_in"] = P(*lead, _maybe(mesh, f, mdl))
+                s["b_out"] = P(*lead, None)
+        return s
+
+    def moe_spec():
+        # TP-within-expert storage (§Perf iteration 4): every model shard
+        # holds the F/|model| slice of every expert — the exact layout the
+        # locality-sorted dispatch consumes, so no per-layer re-layout
+        # collectives. The expert dim stays unsharded; D shards over data
+        # (FSDP-style, gathered once per layer).
+        fmdl = _maybe(mesh, f, mdl)
+        s = {
+            "router": P(L, _maybe(mesh, d, dat), None),
+            "w_gate": P(L, None, _maybe(mesh, d, dat), fmdl),
+            "w_up": P(L, None, _maybe(mesh, d, dat), fmdl),
+            "w_down": P(L, None, fmdl, _maybe(mesh, d, dat)),
+        }
+        if cfg.num_shared_experts:
+            fs = f * cfg.num_shared_experts
+            s["shared"] = {
+                "w_gate": P(L, _maybe(mesh, d, dat), _maybe(mesh, fs, mdl)),
+                "w_up": P(L, _maybe(mesh, d, dat), _maybe(mesh, fs, mdl)),
+                "w_down": P(L, _maybe(mesh, fs, mdl), _maybe(mesh, d, dat)),
+            }
+        return s
+
+    def norm_spec(scanned: bool = True):
+        lead = (L,) if scanned else ()
+        s = {"scale": P(*lead, None)}
+        if cfg.norm_type == "layernorm":
+            s["bias"] = P(*lead, None)
+        return s
+
+    def mamba_spec():
+        di = cfg.d_inner
+        return {
+            "w_in": P(L, _maybe(mesh, d, dat), None),
+            "conv": P(L, None, None),
+            "a_log": P(L, None),
+            "dt_bias": P(L, None),
+            "d_skip": P(L, None),
+            "norm_scale": P(L, None),
+            "w_out": P(L, _maybe(mesh, di, mdl), _maybe(mesh, d, dat)),
+        }
+
+    def rwkv_spec():
+        return {
+            "mu_base": P(L, None, None),
+            "ddl_w1": P(L, _maybe(mesh, d, dat), None),
+            "ddl_w2": P(L, None, None, None),
+            "wr": P(L, _maybe(mesh, d, dat), _maybe(mesh, d, mdl)),
+            "wk": P(L, _maybe(mesh, d, dat), _maybe(mesh, d, mdl)),
+            "wv": P(L, _maybe(mesh, d, dat), _maybe(mesh, d, mdl)),
+            "wg": P(L, _maybe(mesh, d, dat), _maybe(mesh, d, mdl)),
+            "wo": P(L, _maybe(mesh, d, mdl), _maybe(mesh, d, dat)),
+            "w_base": P(L, None),
+            "dec_w1": P(L, _maybe(mesh, d, dat), None),
+            "dec_w2": P(L, None, None),
+            "u_bonus": P(L, None, None),
+            "ln_scale": P(L, None),
+            "cm_mu": P(L, None, None),
+            "cm_k": P(L, _maybe(mesh, d, dat), _maybe(mesh, f, mdl)),
+            "cm_v": P(L, _maybe(mesh, f, mdl), _maybe(mesh, d, dat)),
+            "cm_r": P(L, _maybe(mesh, d, dat), _maybe(mesh, d, mdl)),
+        }
+
+    from ..models.transformer import trunk_kind
+    kind = trunk_kind(cfg)
+    if kind == "attn":
+        layer = {"norm1": norm_spec(), "norm2": norm_spec(),
+                 "attn": attn_spec(True),
+                 "ffn": moe_spec() if cfg.is_moe else mlp_spec(True)}
+    elif kind == "rwkv":
+        layer = {"norm1": norm_spec(), "norm2": norm_spec(),
+                 "rwkv": rwkv_spec()}
+    else:
+        layer = {"norm1": norm_spec(), "mamba": mamba_spec()}
+
+    specs = {
+        "embed": {"table": P(_maybe(mesh, v, mdl), _maybe(mesh, d, dat))},
+        "layers": layer,
+        "final_norm": norm_spec(scanned=False),
+    }
+    if not cfg.tie_embeddings:
+        specs["embed"]["head"] = P(_maybe(mesh, d, dat), _maybe(mesh, v, mdl))
+    if "shared_attn" in cfg.block_pattern:
+        specs["shared_attn"] = {
+            "norm1": norm_spec(False), "norm2": norm_spec(False),
+            "attn": attn_spec(False), "ffn": mlp_spec(False),
+        }
+    return specs
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, global_batch: int):
+    """Input batch PartitionSpecs (tokens/embeds/prefix/targets)."""
+    dp = dp_axes(mesh)
+    bspec = dp if (global_batch % _axsize(mesh, tuple(a for a in dp if a))
+                   == 0 and dp != (None,)) else None
+    out = {"tokens": P(bspec, None)}
+    if cfg.input_mode == "embeddings":
+        out = {"embeds": P(bspec, None, None), "targets": P(bspec, None)}
+    if cfg.prefix_tokens:
+        out["prefix"] = P(bspec, None, None)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, global_batch: int,
+                max_len: int | None = None):
+    """KV/state cache PartitionSpecs mirroring init_cache(cfg).
+
+    When kv heads don't divide the model axis (minicpm 36H, starcoder2
+    kv=4, qwen/chatglm kv=2 on a 16-way axis), the cache is sharded on the
+    SEQUENCE dim instead and decode runs the context-parallel shard_map
+    path (§Perf iteration 3) — otherwise those caches replicate over
+    'model' (193 GB/device for minicpm decode_32k) and every step
+    all-gathers them.
+    """
+    from ..models.layers import _seq_shards
+    from ..models.transformer import trunk_kind
+    dp = dp_axes(mesh)
+    b_ok = (dp != (None,) and
+            global_batch % _axsize(mesh, tuple(a for a in dp if a)) == 0)
+    bspec = dp if b_ok else None
+    kind = trunk_kind(cfg)
+    kv_ax = _maybe(mesh, cfg.num_kv_heads, "model")
+    t = max_len if max_len is not None else 0
+    seq_ax = "model" if (kv_ax is None and
+                         _seq_shards(mesh, cfg, t) > 1) else None
+    if kind == "attn":
+        layers = {"k": P(None, bspec, seq_ax, kv_ax, None),
+                  "v": P(None, bspec, seq_ax, kv_ax, None),
+                  "length": P(None)}
+    elif kind == "rwkv":
+        h = cfg.num_heads
+        h_ax = _maybe(mesh, h, "model")
+        layers = {"tm": {"shift": P(None, bspec, None),
+                         "wkv": P(None, bspec, h_ax, None, None)},
+                  "cm": {"shift": P(None, bspec, None)}}
+    else:
+        h_ax = _maybe(mesh, cfg.ssm_heads, "model")
+        layers = {"conv": P(None, bspec, None, None),
+                  "ssd": P(None, bspec, h_ax, None, None)}
+    specs = {"layers": layers, "pos": P()}
+    if "shared_attn" in cfg.block_pattern:
+        specs["shared"] = {"k": P(None, bspec, seq_ax, kv_ax, None),
+                           "v": P(None, bspec, seq_ax, kv_ax, None),
+                           "length": P(None)}
+    return specs
+
+
+def to_named(tree, mesh: Mesh):
+    import jax
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))

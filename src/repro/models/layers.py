@@ -1,0 +1,346 @@
+"""Shared neural layers: norms, RoPE variants, attention, MLPs, embedding.
+
+Conventions
+-----------
+* Params are plain nested dicts of jnp arrays; init fns take (key, cfg).
+* Master params float32; matmul inputs cast to ``COMPUTE_DTYPE`` (bf16).
+* Attention is computed in query chunks (no S×S materialization) — the
+  XLA analogue of the Pallas flash kernel, used for CPU/dry-run paths.
+* Decode paths take a cache entry and a position offset.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+COMPUTE_DTYPE = jnp.bfloat16
+Q_CHUNK = 1024
+
+
+def _dense(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x.astype(COMPUTE_DTYPE),
+                   w.astype(COMPUTE_DTYPE))
+    if b is not None:
+        y = y + b.astype(COMPUTE_DTYPE)
+    return y
+
+
+# ------------------------------------------------------------------- norms
+def init_norm(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = x32.mean(-1, keepdims=True)
+        var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        var = (x32 ** 2).mean(-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"]
+    return y.astype(COMPUTE_DTYPE)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_frequencies(cfg: ModelConfig) -> jnp.ndarray:
+    rot = int(cfg.head_dim * cfg.rotary_pct)
+    rot -= rot % 2
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2,
+                                                dtype=jnp.float32) / rot))
+
+
+def apply_rope(x, positions, cfg: ModelConfig):
+    """x: (..., S, H, dh); positions: (..., S). Partial rotary supported
+    (rotary_pct<1 rotates only the leading dims — chatglm3's 2-D RoPE)."""
+    freqs = rope_frequencies(cfg)
+    rot = 2 * freqs.shape[0]
+    if rot == 0:
+        return x
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,rot/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return jnp.concatenate([out.astype(x.dtype), xp], -1)
+
+
+# --------------------------------------------------------------- attention
+def init_attention(key, cfg: ModelConfig):
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * dh), jnp.float32) * sc,
+        "wk": jax.random.normal(ks[1], (d, kv * dh), jnp.float32) * sc,
+        "wv": jax.random.normal(ks[2], (d, kv * dh), jnp.float32) * sc,
+        "wo": jax.random.normal(ks[3], (h * dh, d), jnp.float32) * sc,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * dh,), jnp.float32)
+    if cfg.attn_out_bias:
+        p["bo"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def _attn_mask(q_pos, k_pos, cfg: ModelConfig, k_valid=None):
+    """(..., Q, K) boolean mask from absolute positions."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    if cfg.causal:
+        mask = q >= k
+        if cfg.prefix_tokens > 0:  # prefix-LM: bidirectional over the prefix
+            mask |= (q < cfg.prefix_tokens) & (k < cfg.prefix_tokens)
+        if cfg.window > 0:
+            mask &= (q - k) < cfg.window
+    else:
+        mask = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if k_valid is not None:
+        mask &= k_valid[..., None, :]
+    return mask
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, cfg: ModelConfig, k_valid=None):
+    """Query-chunked GQA attention. q: (B,S,H,dh); k,v: (B,T,KV,dh)."""
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    kvh = cfg.num_kv_heads
+    rep = h // kvh
+    scale = dh ** -0.5
+    qs = q.reshape(b, s, kvh, rep, dh)
+
+    def one_chunk(args):
+        qc, qp = args  # (B,C,KV,rep,dh), (C,)
+        logits = jnp.einsum("bcgrd,btgd->bgrct", qc.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        mask = _attn_mask(qp, k_pos, cfg, k_valid)          # (C,T)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bgrct,btgd->bcgrd", probs.astype(COMPUTE_DTYPE),
+                         v.astype(COMPUTE_DTYPE))
+        return out
+
+    chunk = min(Q_CHUNK, s)
+    if s % chunk == 0 and s > chunk:
+        n = s // chunk
+        qs_c = qs.reshape(b, n, chunk, kvh, rep, dh).transpose(1, 0, 2, 3, 4, 5)
+        qp_c = q_pos.reshape(n, chunk)
+        out = jax.lax.map(one_chunk, (qs_c, qp_c))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, dh)
+    else:
+        out = one_chunk((qs, q_pos)).reshape(b, s, h, dh)
+    return out
+
+
+def _seq_shards(mesh, cfg: ModelConfig, t: int) -> int:
+    """Shards for a sequence-sharded KV cache (the §Perf decode fix):
+    applies when kv heads do NOT divide the model axis (else heads shard)
+    and the cache length does."""
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return 1
+    n = mesh.shape["model"]
+    if n > 1 and cfg.num_kv_heads % n != 0 and t % n == 0 \
+            and cfg.window == 0:
+        return n
+    return 1
+
+
+def _decode_attn_seqsharded(q, k_new, v_new, cache, cfg: ModelConfig, mesh):
+    """One-token decode against a sequence-sharded KV cache.
+
+    Each model-shard owns a contiguous T/n slice of the cache: it applies
+    the (single-shard) in-place update, computes partial attention over its
+    slice and combines via online-softmax psum — context parallelism for
+    decode. Replaces the replicated cache + full all-gather that appears
+    when kv-head count does not divide the model axis (minicpm 36 heads,
+    starcoder2 kv=4, qwen/chatglm kv=2 on a 16-way axis).
+    """
+    from jax.sharding import PartitionSpec as P
+    b, _, kvh, rep, dh = q.shape
+    scale = dh ** -0.5
+    # preserve batch sharding over the dp axes — P(None, ...) here would
+    # force an all-gather of the whole cache across 'data' at every step
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dpn = 1
+    for a in dp:
+        dpn *= mesh.shape[a]
+    bax = dp if (dp and b % dpn == 0) else None
+    cspec = P(bax, "model", None, None)
+    qspec = P(bax, None, None, None, None)
+    kspec = P(bax, None, None, None)
+
+    def body(qf, kn, vn, ck, cv, length):
+        ax = jax.lax.axis_index("model")
+        tl = ck.shape[1]
+        slot = length - ax * tl
+        ok = (slot >= 0) & (slot < tl)
+        slot_c = jnp.clip(slot, 0, tl - 1)
+
+        def upd(c, new):
+            return jax.lax.cond(
+                ok,
+                lambda: jax.lax.dynamic_update_slice_in_dim(
+                    c, new.astype(c.dtype), slot_c, axis=1),
+                lambda: c)
+
+        ck2, cv2 = upd(ck, kn), upd(cv, vn)
+        kpos = ax * tl + jnp.arange(tl)
+        kvalid = kpos <= length
+        logits = jnp.einsum("bqgrd,btgd->bgrqt", qf.astype(jnp.float32),
+                            ck2.astype(jnp.float32)) * scale
+        logits = jnp.where(kvalid[None, None, None, None], logits, -1e30)
+        m = jax.lax.pmax(logits.max(-1), "model")        # (B,G,R,Q)
+        pvals = jnp.exp(logits - m[..., None])
+        l = jax.lax.psum(pvals.sum(-1), "model")
+        num = jax.lax.psum(
+            jnp.einsum("bgrqt,btgd->bqgrd", pvals,
+                       cv2.astype(jnp.float32)), "model")
+        out = num / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return out.astype(COMPUTE_DTYPE), ck2, cv2
+
+    out, ck2, cv2 = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(qspec, kspec, kspec, cspec, cspec, P()),
+        out_specs=(qspec, cspec, cspec),
+    )(q, k_new, v_new, cache["k"], cache["v"], cache["length"])
+    new_cache = {"k": ck2, "v": cv2, "length": cache["length"] + 1}
+    return out, new_cache
+
+
+def apply_attention(p, x, cfg: ModelConfig, positions, cache=None,
+                    use_pallas: bool = False, mesh=None):
+    """Returns (out, new_cache). cache=None -> full self-attention (train).
+
+    cache: dict(k=(B,T,KV,dh), v=..., length=scalar) for decode/prefill-
+    continuation; positions are absolute token positions of x's tokens.
+    """
+    b, s, d = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _dense(x, p["wq"], p.get("bq")).reshape(b, s, h, dh)
+    k = _dense(x, p["wk"], p.get("bk")).reshape(b, s, kv, dh)
+    v = _dense(x, p["wv"], p.get("bv")).reshape(b, s, kv, dh)
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+
+    if cache is None:
+        if use_pallas and s % 256 == 0 and kv == h and cfg.prefix_tokens == 0:
+            from ..kernels.flash_attn.ops import causal_attention
+            qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+            kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+            vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+            of = causal_attention(qf, kf, vf, window=cfg.window)
+            out = of.reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+        else:
+            out = _sdpa_chunked(q, k, v, positions, positions, cfg)
+        new_cache = None
+    else:
+        # decode step (s == 1). Sliding-window configs use a ring buffer of
+        # size `window`; full-attention configs use a linear buffer.
+        assert s == 1, "cached attention path is decode-only (s == 1)"
+        t = cache["k"].shape[1]
+        pos = positions[-1]
+        if _seq_shards(mesh, cfg, t) > 1:
+            qh = q.reshape(b, 1, kv, h // kv, dh)
+            out, new_cache = _decode_attn_seqsharded(qh, k, v, cache, cfg,
+                                                     mesh)
+            out = _dense(out.reshape(b, s, h * dh), p["wo"], p.get("bo"))
+            return out, new_cache
+        if cfg.window > 0 and t <= cfg.window:
+            slot = pos % t
+            ck = cache["k"].at[:, slot].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[:, slot].set(v[:, 0].astype(cache["v"].dtype))
+            k_pos = pos - ((slot - jnp.arange(t)) % t)
+            k_valid = k_pos >= 0
+        else:
+            start = cache["length"]
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), start, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), start, axis=1)
+            k_pos = jnp.arange(t)
+            k_valid = k_pos < cache["length"] + 1
+        out = _sdpa_chunked(q, ck, cv, positions, k_pos, cfg, k_valid)
+        new_cache = {"k": ck, "v": cv, "length": cache["length"] + 1}
+
+    out = _dense(out.reshape(b, s, h * dh), p["wo"], p.get("bo"))
+    return out, new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=COMPUTE_DTYPE):
+    t = min(max_len, cfg.window) if cfg.window > 0 else max_len
+    return {
+        "k": jnp.zeros((batch, t, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, t, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------- MLP
+def init_mlp(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    sc_in, sc_out = d ** -0.5, f ** -0.5
+    if cfg.mlp_type == "swiglu":
+        p = {
+            "w_gate": jax.random.normal(ks[0], (d, f), jnp.float32) * sc_in,
+            "w_up": jax.random.normal(ks[1], (d, f), jnp.float32) * sc_in,
+            "w_down": jax.random.normal(ks[2], (f, d), jnp.float32) * sc_out,
+        }
+    else:
+        p = {
+            "w_in": jax.random.normal(ks[0], (d, f), jnp.float32) * sc_in,
+            "w_out": jax.random.normal(ks[1], (f, d), jnp.float32) * sc_out,
+        }
+        if cfg.mlp_bias:
+            p["b_in"] = jnp.zeros((f,), jnp.float32)
+            p["b_out"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    if cfg.mlp_type == "swiglu":
+        return _dense(jax.nn.silu(_dense(x, p["w_gate"]))
+                      * _dense(x, p["w_up"]), p["w_down"])
+    h = jax.nn.gelu(_dense(x, p["w_in"], p.get("b_in")))
+    return _dense(h, p["w_out"], p.get("b_out"))
+
+
+# --------------------------------------------------------------- embedding
+def init_embedding(key, cfg: ModelConfig):
+    p = {"table": jax.random.normal(key, (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * 0.02}
+    if not cfg.tie_embeddings:
+        p["head"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_size),
+            jnp.float32) * cfg.d_model ** -0.5
+    return p
+
+
+def embed_tokens(p, ids, cfg: ModelConfig, use_pallas: bool = False):
+    if use_pallas and cfg.hot_vocab_fraction > 0:
+        from ..kernels.hot_embed.ops import hot_cold_lookup
+        hot = max(1, int(cfg.vocab_size * cfg.hot_vocab_fraction))
+        x = hot_cold_lookup(ids, p["table"], hot)
+    else:
+        x = jnp.take(p["table"], ids, axis=0)
+    return (x * cfg.emb_scale).astype(COMPUTE_DTYPE)
+
+
+def lm_logits(p, x, cfg: ModelConfig):
+    w = p["table"].T if cfg.tie_embeddings else p["head"]
+    return _dense(x, w) * cfg.logit_scale

@@ -1,0 +1,163 @@
+"""Mamba2 (SSD) block — zamba2's backbone.
+
+Chunked state-space-duality algorithm: within a chunk the recurrence is a
+masked attention-like matmul (MXU-friendly); across chunks a short scan
+carries the (H, P, N) state. Single B/C group (ngroups=1), heads of size
+``ssm_head_dim``, state size N = ``cfg.ssm_state``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import COMPUTE_DTYPE, _dense
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * n + h          # z, x, B, C, dt
+    p = {
+        "w_in": jax.random.normal(ks[0], (d, in_dim), jnp.float32) * d ** -0.5,
+        "conv": jax.random.normal(ks[1], (cfg.conv_width, di + 2 * n),
+                                  jnp.float32) * 0.2,
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "w_out": jax.random.normal(ks[2], (di, d), jnp.float32) * di ** -0.5,
+    }
+    return p
+
+
+def _split_in(u, cfg: ModelConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xbc, dt = jnp.split(u, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, state=None):
+    """Depthwise causal conv, width W. state: (B, W-1, C) carry for decode."""
+    w = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xbc[:, : w - 1])
+        buf = jnp.concatenate([pad, xbc], axis=1)
+        new_state = buf[:, -(w - 1):]
+    else:
+        buf = jnp.concatenate([state.astype(xbc.dtype), xbc], axis=1)
+        new_state = buf[:, -(w - 1):]
+    out = sum(buf[:, i: i + xbc.shape[1]] * conv_w[i] for i in range(w))
+    return jax.nn.silu(out), new_state
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-5):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = (y ** 2).mean(-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + eps) * scale).astype(COMPUTE_DTYPE)
+
+
+def ssd_chunked(x, dt, b, c, a_log, chunk: int):
+    """SSD scan. x: (B,T,H,P); dt: (B,T,H); b,c: (B,T,N). Returns (B,T,H,P).
+
+    Recurrence: S_t = exp(-exp(a_log)·dt_t)·S_{t-1} + dt_t·x_t⊗b_t,
+    y_t = S_t·c_t (per head).
+    """
+    bs, t, h, pdim = x.shape
+    n = b.shape[-1]
+    nc = t // chunk
+    A = -jnp.exp(a_log)                                     # (H,)
+    la = (dt * A).astype(jnp.float32)                       # (B,T,H) log-decay
+    xs = (x * dt[..., None]).astype(jnp.float32)            # dt-weighted input
+
+    def reshape_c(v):
+        return v.reshape(bs, nc, chunk, *v.shape[2:])
+
+    la_c, xs_c = reshape_c(la), reshape_c(xs)
+    b_c, c_c = reshape_c(b.astype(jnp.float32)), reshape_c(c.astype(jnp.float32))
+    cums = jnp.cumsum(la_c, axis=2)                         # (B,NC,L,H)
+
+    # ---- intra-chunk (attention-like, lower triangular)
+    rel = cums[:, :, :, None, :] - cums[:, :, None, :, :]   # (B,NC,L,L,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: exp of the (positive) upper triangle overflows and
+    # its cotangent would poison the gradient through jnp.where
+    rel = jnp.where(tri[None, None, :, :, None], rel, -1e30)
+    dec = jnp.exp(rel)
+    cb = jnp.einsum("bgin,bgjn->bgij", c_c, b_c)            # (B,NC,L,L)
+    m = cb[..., None] * dec                                 # (B,NC,L,L,H)
+    y_intra = jnp.einsum("bgijh,bgjhp->bgihp", m, xs_c)
+
+    # ---- chunk states: S_g = Σ_j exp(cums_last - cums_j) b_j ⊗ xs_j
+    dec_last = jnp.exp(cums[:, :, -1:, :] - cums)           # (B,NC,L,H)
+    s_chunk = jnp.einsum("bgjh,bgjn,bgjhp->bghnp", dec_last, b_c, xs_c)
+
+    # ---- inter-chunk scan
+    g_total = jnp.exp(cums[:, :, -1, :])                    # (B,NC,H)
+
+    def scan_fn(s_prev, inp):
+        g, s_c = inp                                        # (B,H), (B,H,N,P)
+        s_new = s_prev * g[..., None, None] + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bs, h, n, pdim), jnp.float32)
+    _, s_before = jax.lax.scan(
+        scan_fn, s0, (g_total.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)))
+    s_before = s_before.transpose(1, 0, 2, 3, 4)            # (B,NC,H,N,P)
+
+    dec_in = jnp.exp(cums)                                  # (B,NC,L,H)
+    y_inter = jnp.einsum("bgin,bgih,bghnp->bgihp", c_c, dec_in, s_before)
+
+    y = (y_intra + y_inter).reshape(bs, t, h, pdim)
+    return y.astype(COMPUTE_DTYPE)
+
+
+def apply_mamba(p, x, cfg: ModelConfig, cache=None):
+    """x: (B,S,D). cache: dict(conv=(B,W-1,C), ssd=(B,H,N,P), pos) or None."""
+    bsz, s, _ = x.shape
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    u = _dense(x, p["w_in"])
+    z, xbc, dt_raw = _split_in(u, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+
+    if cache is None:
+        xbc, _ = _causal_conv(xbc, p["conv"])
+        xi, b, c = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + n], axis=-1)
+        xh = xi.reshape(bsz, s, h, pdim)
+        # pad time to a chunk multiple (zero dt ⇒ padded steps are identity)
+        pad = (-s) % cfg.ssm_chunk
+        if pad:
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+            y = ssd_chunked(xh_p, dt_p, b_p, c_p, p["a_log"],
+                            cfg.ssm_chunk)[:, :s]
+        else:
+            y = ssd_chunked(xh, dt, b, c, p["a_log"], cfg.ssm_chunk)
+        y = y + xh.astype(jnp.float32) * p["d_skip"][:, None]
+        new_cache = None
+    else:
+        xbc, conv_state = _causal_conv(xbc, p["conv"], cache["conv"])
+        xi, b, c = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + n], axis=-1)
+        xh = xi.reshape(bsz, s, h, pdim).astype(jnp.float32)
+        a = jnp.exp(dt * -jnp.exp(p["a_log"]))[:, 0]        # (B,H)
+        s_new = (cache["ssd"] * a[..., None, None]
+                 + jnp.einsum("bn,bhp->bhnp", b[:, 0].astype(jnp.float32),
+                              xh[:, 0] * dt[:, 0, :, None]))
+        y = jnp.einsum("bn,bhnp->bhp", c[:, 0].astype(jnp.float32), s_new)
+        y = (y + xh[:, 0] * p["d_skip"][:, None])[:, None]
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype),
+                     "ssd": s_new}
+
+    y = _gated_rmsnorm(y.reshape(bsz, s, cfg.d_inner), z, p["norm_scale"])
+    return _dense(y, p["w_out"]), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=COMPUTE_DTYPE):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+        "ssd": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                          cfg.ssm_head_dim), jnp.float32),
+    }

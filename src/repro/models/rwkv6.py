@@ -1,0 +1,221 @@
+"""RWKV6 ("Finch") block — attention-free, data-dependent decay.
+
+Time-mix: per-head wkv state S ∈ (H, K, V) with per-channel, per-token
+decay w_t = exp(-exp(ŵ_t)) where ŵ_t is data-dependent via a low-rank MLP
+(the Finch contribution); token-shift interpolation is likewise
+data-dependent (ddlerp). Channel-mix is the standard squared-ReLU FFN.
+
+Training uses a time scan (sequential, correct); decoding is O(1)/token.
+The chunked block-parallel form is a documented TPU perf follow-up.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import COMPUTE_DTYPE, _dense
+
+LORA_DIM = 32
+DDLERP_DIM = 32
+
+
+def init_rwkv(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.num_heads if cfg.num_heads > 0 else d // 64
+    dh = d // h
+    ks = jax.random.split(key, 12)
+    sc = d ** -0.5
+    p = {
+        # ddlerp token-shift: base mus + low-rank data-dependent deltas
+        "mu_base": jnp.zeros((5, d), jnp.float32),
+        "ddl_w1": jax.random.normal(ks[0], (d, 5 * DDLERP_DIM), jnp.float32) * sc,
+        "ddl_w2": jax.random.normal(ks[1], (5, DDLERP_DIM, d), jnp.float32) * 0.01,
+        # projections r,k,v,g + output
+        "wr": jax.random.normal(ks[2], (d, d), jnp.float32) * sc,
+        "wk": jax.random.normal(ks[3], (d, d), jnp.float32) * sc,
+        "wv": jax.random.normal(ks[4], (d, d), jnp.float32) * sc,
+        "wg": jax.random.normal(ks[5], (d, d), jnp.float32) * sc,
+        "wo": jax.random.normal(ks[6], (d, d), jnp.float32) * sc,
+        # decay: base + low-rank data-dependent (the v6 feature)
+        "w_base": jnp.full((d,), -6.0, jnp.float32),
+        "dec_w1": jax.random.normal(ks[7], (d, LORA_DIM), jnp.float32) * sc,
+        "dec_w2": jax.random.normal(ks[8], (LORA_DIM, d), jnp.float32) * 0.01,
+        "u_bonus": jnp.zeros((h, dh), jnp.float32),
+        "ln_scale": jnp.ones((d,), jnp.float32),
+        # channel mix
+        "cm_mu": jnp.zeros((2, d), jnp.float32),
+        "cm_k": jax.random.normal(ks[9], (d, cfg.d_ff), jnp.float32) * sc,
+        "cm_v": jax.random.normal(ks[10], (cfg.d_ff, d), jnp.float32)
+                * cfg.d_ff ** -0.5,
+        "cm_r": jax.random.normal(ks[11], (d, d), jnp.float32) * sc,
+    }
+    return p
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift for the 5 streams (r,k,v,g,w)."""
+    base = x + (x_prev - x) * p["mu_base"][0]  # shared pre-mix
+    lo = jnp.tanh(_dense(base, p["ddl_w1"]))
+    lo = lo.reshape(*lo.shape[:-1], 5, DDLERP_DIM)
+    delta = jnp.einsum("...sr,srd->...sd", lo.astype(jnp.float32), p["ddl_w2"])
+    mus = p["mu_base"][None, None] + delta          # (B,T,5,D)
+    xx = x_prev - x
+    return tuple(x + xx * mus[..., i, :].astype(x.dtype) for i in range(5))
+
+
+def _wkv_scan(r, k, v, w, u, h, dh):
+    """Sequential wkv: S_t = diag(w_t)·S_{t-1} + k_t⊗v_t;
+    y_t = r_t·(S_{t-1} + u·k_t⊗v_t)."""
+    bsz, t, _ = r.shape
+
+    def to_heads(x):
+        return x.reshape(bsz, t, h, dh).transpose(1, 0, 2, 3)  # (T,B,H,dh)
+
+    rh, kh, vh, wh = map(to_heads, (r, k, v, w))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                               # (B,H,dh)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = s * wt[..., None] + kv
+        return s_new, y
+
+    s0 = jnp.zeros((bsz, h, dh, dh), jnp.float32)
+    s_fin, ys = jax.lax.scan(step, s0, (rh, kh, vh, wh))
+    return ys.transpose(1, 0, 2, 3).reshape(bsz, t, h * dh), s_fin
+
+
+WKV_CHUNK = 16
+
+
+def _wkv_chunked(r, k, v, logw, u, h, dh, chunk: int = WKV_CHUNK):
+    """Block-parallel wkv (§Perf iteration: rwkv6 train was memory-bound on
+    the 4096-step token scan — state re-read/written every token).
+
+    Scan over T/chunk chunks carrying S ∈ (B,H,dh,dh); within a chunk the
+    recurrence is closed-form:
+
+      y_t = Σ_{j<t} (r_t ⊙ e^{c_{t-1}-c_j}) · k_j v_j
+            + (r_t ⊙ u ⊙ k_t)·1 v_t + (r_t ⊙ e^{c_{t-1}}) · S_in
+
+    with c = intra-chunk cumulative log-decay (c = Σ log w ≤ 0). Every
+    exponent is a *suffix sum of log-decays* and hence ≤ 0 — no overflow,
+    no renormalization needed. State traffic drops by the chunk length and
+    the per-token outer products become (L×dh)·(dh×dh) MXU matmuls.
+    """
+    bsz, t, _ = r.shape
+    nc = t // chunk
+
+    def to_chunks(x):  # (B,T,D) -> (NC, B, H, L, dh)
+        return (x.reshape(bsz, nc, chunk, h, dh)
+                 .transpose(1, 0, 3, 2, 4))
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, logw))
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)     # strict lower
+
+    def chunk_step(s, inp):
+        rr, kk, vv, lw = inp                  # (B,H,L,dh)
+        cc = jnp.cumsum(lw, axis=2)           # inclusive cumulative log-w
+        cm1 = cc - lw                         # exclusive (c_{t-1})
+        # ---- intra-chunk pairwise (j < t): exponent = c_{t-1} - c_j <= 0
+        rel = cm1[:, :, :, None, :] - cc[:, :, None, :, :]   # (B,H,L,L,dh)
+        dec = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+        att = jnp.einsum("bhtd,bhjd,bhtjd->bhtj", rr, kk, dec)
+        y = jnp.einsum("bhtj,bhjd->bhtd", att, vv)
+        # ---- current-token bonus (u term)
+        coeff = jnp.einsum("bhtd,bhtd->bht", rr, u[None, :, None, :] * kk)
+        y += coeff[..., None] * vv
+        # ---- contribution of the carried state
+        y += jnp.einsum("bhtd,bhdv->bhtv", rr * jnp.exp(cm1), s)
+        # ---- state update: S' = S·e^{c_L} + Σ_j (k_j e^{c_L - c_j}) v_j
+        k_dec = kk * jnp.exp(cc[:, :, -1:, :] - cc)
+        s_new = (s * jnp.exp(cc[:, :, -1])[..., :, None]
+                 + jnp.einsum("bhld,bhlv->bhdv", k_dec, vv))
+        return s_new, y
+
+    s0 = jnp.zeros((bsz, h, dh, dh), jnp.float32)
+    s_fin, ys = jax.lax.scan(chunk_step, s0, (rc, kc, vc, lwc))
+    # (NC,B,H,L,dh) -> (B,T,H*dh)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(bsz, t, h * dh)
+    return y, s_fin
+
+
+def apply_rwkv_timemix(p, x, cfg: ModelConfig, cache=None):
+    """x: (B,S,D). cache: dict(shift=(B,D), wkv=(B,H,dh,dh)) or None."""
+    bsz, s, d = x.shape
+    h = cfg.num_heads if cfg.num_heads > 0 else d // 64
+    dh = d // h
+    if cache is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_prev = jnp.concatenate([cache["shift"][:, None].astype(x.dtype),
+                                  x[:, :-1]], axis=1)
+    xr, xk, xv, xg, xw = _ddlerp(p, x, x_prev)
+    r = _dense(xr, p["wr"]).astype(jnp.float32)
+    k = _dense(xk, p["wk"]).astype(jnp.float32)
+    v = _dense(xv, p["wv"]).astype(jnp.float32)
+    g = jax.nn.silu(_dense(xg, p["wg"]))
+    # data-dependent decay (Finch): w = exp(-exp(w_base + lora(xw)))
+    dec = p["w_base"] + _dense(jnp.tanh(_dense(xw, p["dec_w1"])),
+                               p["dec_w2"]).astype(jnp.float32)
+    logw = -jnp.exp(dec)          # log decay, always <= 0
+    w = jnp.exp(logw)
+    u = p["u_bonus"]
+
+    if cache is None:
+        if s % WKV_CHUNK == 0:
+            y, s_fin = _wkv_chunked(r, k, v, logw, u, h, dh)
+        else:       # ragged tails fall back to the token scan
+            y, s_fin = _wkv_scan(r, k, v, w, u, h, dh)
+        new_cache = None
+    else:
+        rt = r.reshape(bsz, h, dh)
+        kt = k.reshape(bsz, h, dh)
+        vt = v.reshape(bsz, h, dh)
+        wt = w.reshape(bsz, h, dh)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt,
+                       cache["wkv"] + u[None, :, :, None] * kv)
+        s_fin = cache["wkv"] * wt[..., None] + kv
+        y = y.reshape(bsz, 1, d)
+        new_cache = {"shift": x[:, -1], "wkv": s_fin}
+
+    # per-head groupnorm (RWKV uses GroupNorm over heads), then gate
+    yh = y.reshape(bsz, s, h, dh).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = ((yh - mu) ** 2).mean(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = (yh.reshape(bsz, s, d) * p["ln_scale"]).astype(COMPUTE_DTYPE) * g
+    out = _dense(y, p["wo"])
+    if cache is None:
+        return out, None
+    return out, new_cache
+
+
+def apply_rwkv_channelmix(p, x, cfg: ModelConfig, cache=None):
+    bsz, s, d = x.shape
+    if cache is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        new_cache = None
+    else:
+        x_prev = jnp.concatenate([cache["shift"][:, None].astype(x.dtype),
+                                  x[:, :-1]], axis=1)
+        new_cache = {"shift": x[:, -1]}
+    xx = x_prev - x
+    xk = x + xx * p["cm_mu"][0].astype(x.dtype)
+    xr = x + xx * p["cm_mu"][1].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(_dense(xk, p["cm_k"])))
+    out = jax.nn.sigmoid(_dense(xr, p["cm_r"])) * _dense(kk, p["cm_v"])
+    return out, new_cache
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    h = cfg.num_heads if cfg.num_heads > 0 else d // 64
+    dh = d // h
+    return {
+        "tm": {"shift": jnp.zeros((batch, d), jnp.float32),
+               "wkv": jnp.zeros((batch, h, dh, dh), jnp.float32)},
+        "cm": {"shift": jnp.zeros((batch, d), jnp.float32)},
+    }

@@ -1,0 +1,106 @@
+"""Jitted train / prefill / serve steps with full sharding annotations.
+
+`make_train_step` builds the donated, GSPMD-sharded update; microbatch
+gradient accumulation (`TrainConfig.microbatch`) runs an inner scan so the
+peak activation footprint is one microbatch. `make_serve_step` builds the
+cache-donating decode step used by the decode/long dry-run cells.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..launch.shardings import (batch_specs, cache_specs, dp_axes,
+                                param_specs, to_named)
+from ..models.config import ModelConfig
+from ..models.transformer import decode_step, forward, init_cache, loss_fn
+from .optim import TrainConfig, adamw_update, init_opt_state
+
+
+def opt_state_specs(pspecs):
+    return {"mu": pspecs, "nu": pspecs, "step": P()}
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh):
+    """Returns (train_step, in_shardings, out_shardings)."""
+    pspecs = param_specs(cfg, mesh)
+
+    def compute_grads(params, batch):
+        def lf(p):
+            loss, metrics = loss_fn(p, batch, cfg, mesh)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if tc.microbatch and tc.microbatch > 0:
+            # gradient accumulation: scan over microbatch slices
+            def slice_mb(x, i, n):
+                return x.reshape(n, -1, *x.shape[1:])[i]
+
+            some = next(iter(batch.values()))
+            n = some.shape[0] // tc.microbatch
+            zeros = jax.tree.map(jnp.zeros_like, params)
+
+            def body(acc, i):
+                mb = jax.tree.map(lambda x: slice_mb(x, i, n), batch)
+                loss, metrics, grads = compute_grads(params, mb)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return acc, (loss, metrics)
+
+            grads, (losses, metricses) = jax.lax.scan(
+                body, zeros, jnp.arange(n))
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), metricses)
+        else:
+            loss, metrics, grads = compute_grads(params, batch)
+
+        params2, opt_state2, om = adamw_update(params, grads, opt_state, tc)
+        metrics = dict(metrics, loss=loss, **om)
+        return params2, opt_state2, metrics
+
+    some_batch_spec = None  # resolved by caller via batch_specs
+    in_shardings = (to_named(pspecs, mesh),
+                    to_named(opt_state_specs(pspecs), mesh),
+                    None)
+    out_shardings = (to_named(pspecs, mesh),
+                     to_named(opt_state_specs(pspecs), mesh),
+                     None)
+    step = jax.jit(train_step, in_shardings=in_shardings,
+                   out_shardings=out_shardings,
+                   donate_argnums=(0, 1))
+    return step, pspecs
+
+
+def make_forward(cfg: ModelConfig, mesh):
+    """Prefill forward (logits + aux); inference param layout (no FSDP)."""
+    pspecs = param_specs(cfg, mesh, serve=True)
+
+    def fwd(params, batch):
+        logits, aux = forward(params, batch, cfg, mesh)
+        return logits, aux
+
+    return jax.jit(fwd, in_shardings=(to_named(pspecs, mesh), None)), pspecs
+
+
+def make_serve_step(cfg: ModelConfig, mesh, global_batch: int,
+                    max_len: int):
+    """One-token decode step; cache donated in-place; inference layout."""
+    pspecs = param_specs(cfg, mesh, serve=True)
+    cspecs = cache_specs(cfg, mesh, global_batch, max_len)
+
+    def serve(params, cache, tokens):
+        logits, new_cache = decode_step(params, cache, tokens, cfg, mesh)
+        return logits, new_cache
+
+    step = jax.jit(
+        serve,
+        in_shardings=(to_named(pspecs, mesh), to_named(cspecs, mesh), None),
+        out_shardings=(None, to_named(cspecs, mesh)),
+        donate_argnums=(1,),
+    )
+    return step, pspecs, cspecs

@@ -1,0 +1,47 @@
+"""Shared fixtures: small graphs spanning the structural regimes the paper
+cares about (power-law community, RMAT skew, high-diameter grid, ring)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.csr import Graph, from_edges
+from repro.core.generators import powerlaw_community, rmat, road_grid, small_world
+
+
+@pytest.fixture(scope="session")
+def plc_graph() -> Graph:
+    return powerlaw_community(2000, avg_degree=8.0, seed=3)
+
+
+@pytest.fixture(scope="session")
+def rmat_graph() -> Graph:
+    return rmat(10, edge_factor=8, seed=4)
+
+
+@pytest.fixture(scope="session")
+def grid_graph() -> Graph:
+    return road_grid(20, shortcuts=8, seed=5)
+
+
+@pytest.fixture(scope="session")
+def ring_graph() -> Graph:
+    return small_world(512, k=4, rewire=0.02, seed=6)
+
+
+@pytest.fixture(scope="session")
+def tiny_graph() -> Graph:
+    """Hand-checkable 8-vertex graph (paper Fig 2.2.1 style)."""
+    edges = [(0, 1), (0, 2), (1, 2), (2, 3), (3, 0), (3, 4),
+             (4, 5), (5, 6), (6, 4), (6, 7), (7, 0), (1, 4)]
+    src, dst = zip(*edges)
+    return from_edges(8, src, dst)
+
+
+GRAPH_FIXTURES = ["plc_graph", "rmat_graph", "grid_graph", "ring_graph",
+                  "tiny_graph"]
+
+
+@pytest.fixture(params=GRAPH_FIXTURES)
+def any_graph(request) -> Graph:
+    return request.getfixturevalue(request.param)

@@ -1,0 +1,202 @@
+"""The six JAX graph kernels vs independent host oracles + equivariance."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.algos.graph_arrays import to_device
+from repro.algos.kernels import (bc, bc_single_source, bfs, cc_labelprop,
+                                 cc_shiloach_vishkin, pagerank, sssp)
+from repro.core.lorder import lorder
+from repro.core.traversal import bfs_levels
+
+
+# --------------------------------------------------------------- oracles
+def pr_oracle(g, damping=0.85, iters=20, tol=1e-6):
+    n = g.num_vertices
+    r = np.full(n, 1.0 / n)
+    outdeg = np.maximum(g.out_degree.astype(np.float64), 1.0)
+    t = g.transpose
+    for _ in range(iters):
+        contrib = r / outdeg
+        summed = np.zeros(n)
+        np.add.at(summed, t.edge_src, contrib[t.indices])
+        dangling = r[g.out_degree == 0].sum()
+        r_new = (1 - damping) / n + damping * (summed + dangling / n)
+        if np.abs(r_new - r).sum() <= tol:
+            r = r_new
+            break
+        r = r_new
+    return r
+
+
+def cc_oracle(g):
+    """Union-find over symmetrized edges; labels = min vertex in component."""
+    parent = np.arange(g.num_vertices)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in zip(g.edge_src, g.indices):
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    return np.array([find(v) for v in range(g.num_vertices)])
+
+
+def sssp_oracle(g, weights, src):
+    n = g.num_vertices
+    INF = np.int64(2**31 - 1)
+    dist = np.full(n, INF)
+    dist[src] = 0
+    for _ in range(n):
+        du = dist[g.edge_src]
+        cand = np.where(du == INF, INF, du + weights)
+        new = dist.copy()
+        np.minimum.at(new, g.indices, cand)
+        if np.array_equal(new, dist):
+            break
+        dist = new
+    return dist
+
+
+def bc_oracle(g, sources):
+    """Brandes via per-level BFS (python reference)."""
+    n = g.num_vertices
+    total = np.zeros(n)
+    for s in sources:
+        depth = bfs_levels(g, s)
+        sigma = np.zeros(n)
+        sigma[s] = 1.0
+        maxl = depth.max()
+        src, dst = g.edge_src, g.indices
+        tree = (depth[dst] == depth[src] + 1) & (depth[src] >= 0)
+        for lvl in range(maxl):
+            m = tree & (depth[src] == lvl)
+            np.add.at(sigma, dst[m], sigma[src[m]])
+        delta = np.zeros(n)
+        for lvl in range(maxl - 1, -1, -1):
+            m = tree & (depth[src] == lvl)
+            contrib = sigma[src[m]] / np.maximum(sigma[dst[m]], 1e-30) \
+                * (1.0 + delta[dst[m]])
+            np.add.at(delta, src[m], contrib)
+        delta[s] = 0.0
+        total += delta
+    return total
+
+
+# ----------------------------------------------------------------- tests
+def test_bfs_matches_host(any_graph):
+    g = any_graph
+    ga = to_device(g)
+    got = np.asarray(bfs(ga, jnp.int32(0)))
+    want = bfs_levels(g, 0)
+    assert np.array_equal(got, want)
+
+
+def test_pagerank_matches_oracle(plc_graph):
+    g = plc_graph
+    got = np.asarray(pagerank(to_device(g)))
+    want = pr_oracle(g)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-9)
+
+
+def test_pagerank_sums_to_one(rmat_graph):
+    r = np.asarray(pagerank(to_device(rmat_graph)))
+    assert abs(r.sum() - 1.0) < 1e-3
+
+
+def test_cc_labelprop_matches_oracle(any_graph):
+    g = any_graph
+    got = np.asarray(cc_labelprop(to_device(g)))
+    want = cc_oracle(g)
+    assert np.array_equal(got, want)
+
+
+def test_ccsv_same_partition_as_labelprop(any_graph):
+    g = any_graph
+    ga = to_device(g)
+    a = np.asarray(cc_labelprop(ga))
+    b = np.asarray(cc_shiloach_vishkin(ga))
+    # identical partitions (labels may differ per component representative)
+    import collections
+    amap, bmap = {}, {}
+    for x, y in zip(a, b):
+        assert amap.setdefault(x, y) == y
+        assert bmap.setdefault(y, x) == x
+
+
+def test_sssp_matches_oracle(plc_graph):
+    g = plc_graph
+    ga = to_device(g)
+    got = np.asarray(sssp(ga, jnp.int32(0)), dtype=np.int64)
+    want = sssp_oracle(g, np.asarray(ga.weights), 0)
+    assert np.array_equal(got, want)
+
+
+def test_bc_matches_oracle(tiny_graph):
+    g = tiny_graph
+    got = np.asarray(bc(to_device(g), sources=(0, 3)))
+    want = bc_oracle(g, (0, 3))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_bc_larger_graph(plc_graph):
+    g = plc_graph
+    got = np.asarray(bc(to_device(g), sources=(0, 1)))
+    want = bc_oracle(g, (0, 1))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("kernel,extract", [
+    ("bfs", lambda ga, g: np.asarray(bfs(ga, jnp.int32(0)))),
+    ("pr", lambda ga, g: np.asarray(pagerank(ga))),
+    ("sssp", lambda ga, g: np.asarray(sssp(ga, jnp.int32(0)))),
+])
+def test_kernels_equivariant_under_lorder(plc_graph, kernel, extract):
+    """The paper's contract: reordering changes layout, never results."""
+    g = plc_graph
+    perm = np.asarray(lorder(g, kappa=3))
+    gp = g.apply_permutation(perm)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    ga, gpa = to_device(g), to_device(gp, canonical_ids=inv)
+    if kernel in ("bfs", "sssp"):
+        a = extract(ga, g)
+        b_full = (np.asarray(bfs(gpa, jnp.int32(int(perm[0]))))
+                  if kernel == "bfs"
+                  else np.asarray(sssp(gpa, jnp.int32(int(perm[0])))))
+        np.testing.assert_allclose(a, b_full[perm], rtol=1e-5, atol=1e-6)
+    else:
+        a = extract(ga, g)
+        b = extract(gpa, gp)
+        np.testing.assert_allclose(a, b[perm], rtol=1e-4, atol=1e-8)
+
+
+def test_bfs_unreachable_is_minus_one():
+    from repro.core.csr import from_edges
+    g = from_edges(4, [0], [1])   # 2,3 unreachable
+    d = np.asarray(bfs(to_device(g), jnp.int32(0)))
+    assert d.tolist() == [0, 1, -1, -1]
+
+
+def test_sssp_weights_relabel_invariant(plc_graph):
+    """Edge weights are a function of edge identity, not layout."""
+    g = plc_graph
+    perm = np.asarray(lorder(g, kappa=2))
+    gp = g.apply_permutation(perm)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    wa = {}
+    ga = to_device(g)
+    for s, d, w in zip(np.asarray(ga.src), np.asarray(ga.indices),
+                       np.asarray(ga.weights)):
+        wa[(int(s), int(d))] = int(w)
+    gpa = to_device(gp, canonical_ids=inv)
+    for s, d, w in zip(np.asarray(gpa.src)[:500], np.asarray(gpa.indices)[:500],
+                       np.asarray(gpa.weights)[:500]):
+        assert wa[(int(inv[s]), int(inv[d]))] == int(w)

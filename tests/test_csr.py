@@ -1,0 +1,91 @@
+"""CSR container: construction, transpose, relabeling isomorphism."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.csr import (Graph, from_edges, ranges_to_indices,
+                            validate_permutation)
+
+
+def test_ranges_to_indices_basic():
+    out = ranges_to_indices(np.array([0, 10, 5]), np.array([3, 2, 0]))
+    assert out.tolist() == [0, 1, 2, 10, 11]
+
+
+def test_ranges_to_indices_empty():
+    assert ranges_to_indices(np.array([]), np.array([])).size == 0
+
+
+def test_from_edges_sorted_rows(tiny_graph):
+    g = tiny_graph
+    for v in range(g.num_vertices):
+        row = g.neighbors(v)
+        assert np.all(np.diff(row) >= 0), f"row {v} not sorted"
+
+
+def test_degrees(tiny_graph):
+    g = tiny_graph
+    assert g.out_degree.sum() == g.num_edges
+    assert g.in_degree.sum() == g.num_edges
+    assert np.array_equal(g.degree, g.out_degree + g.in_degree)
+
+
+def test_transpose_involution(any_graph):
+    g = any_graph
+    tt = g.transpose.transpose
+    assert np.array_equal(tt.indptr, g.indptr)
+    assert np.array_equal(np.sort(tt.edge_multiset(), axis=0),
+                          np.sort(g.edge_multiset(), axis=0))
+
+
+def test_transpose_edge_count(any_graph):
+    assert any_graph.transpose.num_edges == any_graph.num_edges
+
+
+def test_apply_permutation_isomorphism(any_graph):
+    g = any_graph
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(g.num_vertices)
+    gp = g.apply_permutation(perm)
+    # edge multiset maps through the permutation
+    orig = g.edge_multiset()
+    mapped = np.stack([perm[orig[:, 0]], perm[orig[:, 1]]], 1)
+    order = np.lexsort((mapped[:, 1], mapped[:, 0]))
+    assert np.array_equal(mapped[order], gp.edge_multiset())
+
+
+def test_apply_identity_is_noop(tiny_graph):
+    g = tiny_graph
+    gp = g.apply_permutation(np.arange(g.num_vertices))
+    assert np.array_equal(gp.indptr, g.indptr)
+    assert np.array_equal(gp.indices, g.indices)
+
+
+def test_permutation_degree_preserved(plc_graph):
+    g = plc_graph
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(g.num_vertices)
+    gp = g.apply_permutation(perm)
+    assert np.array_equal(gp.out_degree[perm], g.out_degree)
+    assert np.array_equal(gp.in_degree[perm], g.in_degree)
+
+
+def test_undirected_symmetric(plc_graph):
+    und = plc_graph.undirected
+    em = und.edge_multiset()
+    fwd = set(map(tuple, em))
+    assert all((b, a) in fwd for a, b in fwd)
+
+
+def test_validate_permutation():
+    assert validate_permutation(np.array([2, 0, 1]), 3)
+    assert not validate_permutation(np.array([0, 0, 1]), 3)
+    assert not validate_permutation(np.array([0, 1]), 3)
+
+
+def test_frontier_neighbors(tiny_graph):
+    g = tiny_graph
+    nbrs = g.frontier_neighbors(np.array([0, 3]))
+    expect = np.concatenate([g.neighbors(0), g.neighbors(3)])
+    assert np.array_equal(nbrs, expect)

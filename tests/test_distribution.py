@@ -1,0 +1,150 @@
+"""Distribution layer on the degenerate host mesh: shardings coverage,
+sharded graph engine vs single-device, hlo trip-count accounting."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.shardings import batch_specs, cache_specs, param_specs
+
+
+def _tree_paths(tree):
+    return {jax.tree_util.keystr(p)
+            for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_cover_param_tree(arch):
+    """Every param leaf has a spec leaf at the same path, and ranks match."""
+    from repro.models.transformer import init_params
+    cfg = smoke_config(arch, layers=2)
+    mesh = make_host_mesh()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    specs = param_specs(cfg, mesh)
+    flat_p = dict(jax.tree_util.tree_flatten_with_path(params)[0])
+    flat_s = {p: s for p, s in
+              jax.tree_util.tree_flatten_with_path(
+                  specs, is_leaf=lambda x: isinstance(x, P))[0]}
+    pk = {jax.tree_util.keystr(k) for k in flat_p}
+    sk = {jax.tree_util.keystr(k) for k in flat_s}
+    assert pk == sk, f"spec/param path mismatch: {pk ^ sk}"
+    for (kp, arr) in jax.tree_util.tree_flatten_with_path(params)[0]:
+        spec = dict((jax.tree_util.keystr(k), s) for k, s in
+                    jax.tree_util.tree_flatten_with_path(
+                        specs, is_leaf=lambda x: isinstance(x, P))[0])[
+            jax.tree_util.keystr(kp)]
+        assert len(spec) <= arr.ndim, f"{kp}: spec {spec} vs {arr.shape}"
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "rwkv6-3b", "zamba2-1.2b",
+                                  "mixtral-8x7b"])
+def test_cache_specs_cover_cache_tree(arch):
+    from repro.models.transformer import init_cache
+    cfg = smoke_config(arch, layers=2)
+    mesh = make_host_mesh()
+    cache = init_cache(cfg, 4, 32)
+    specs = cache_specs(cfg, mesh, 4)
+    pk = _tree_paths(cache)
+    sk = {jax.tree_util.keystr(p) for p, _ in
+          jax.tree_util.tree_flatten_with_path(
+              specs, is_leaf=lambda x: isinstance(x, P))[0]}
+    assert pk == sk, f"{pk ^ sk}"
+
+
+def test_batch_specs_shapes():
+    cfg = smoke_config("paligemma-3b", layers=2)
+    mesh = make_host_mesh()
+    out = batch_specs(cfg, mesh, 8)
+    assert "tokens" in out and "prefix" in out
+
+
+def test_distributed_pagerank_matches_single(plc_graph):
+    from repro.algos.graph_arrays import to_device
+    from repro.algos.kernels import pagerank
+    from repro.core.dist import make_distributed_pagerank
+    g = plc_graph
+    mesh = make_host_mesh()
+    run, _ = make_distributed_pagerank(g, mesh, axis="data", num_iters=20)
+    got = np.asarray(run())
+    want = np.asarray(pagerank(to_device(g), num_iters=20))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-7)
+
+
+def test_sharded_spmv_partition_edges(plc_graph):
+    from repro.core.dist import partition_edges
+    s, d, v, per = partition_edges(plc_graph, 4)
+    assert s.shape == d.shape == v.shape
+    assert v.sum() == plc_graph.num_edges
+    # every edge lands in the shard owning its destination
+    for i in range(4):
+        dst_global = d[i][v[i]] + i * per
+        assert (dst_global // per == i).all()
+
+
+# ------------------------------------------------------- hlo accounting
+def test_hlo_trip_count_scaling():
+    """analyse_hlo must multiply while-body costs by the trip count."""
+    from benchmarks.hlo_analysis import analyse_hlo
+
+    def body(c, _):
+        x, w = c
+        return (jnp.tanh(x @ w), w), ()
+
+    def prog(x, w):
+        (y, _), _ = jax.lax.scan(body, (x, w), None, length=7)
+        return y
+
+    x = jnp.ones((64, 64))
+    w = jnp.ones((64, 64))
+    hlo = jax.jit(prog).lower(x, w).compile().as_text()
+    out = analyse_hlo(hlo)
+    # 7 iterations × 2·64³ flops
+    expect = 7 * 2 * 64 ** 3
+    assert abs(out["dot_flops"] - expect) / expect < 0.05, out["dot_flops"]
+
+
+def test_hlo_unrolled_matches_cost_analysis():
+    from benchmarks.hlo_analysis import analyse_hlo
+
+    def prog(x, w):
+        for _ in range(3):
+            x = x @ w
+        return x
+
+    x = jnp.ones((32, 32))
+    w = jnp.ones((32, 32))
+    compiled = jax.jit(prog).lower(x, w).compile()
+    got = analyse_hlo(compiled.as_text())["dot_flops"]
+    want = compiled.cost_analysis().get("flops", 0.0)
+    assert abs(got - want) / max(want, 1) < 0.05
+
+
+def test_hlo_collective_bytes_counted():
+    from benchmarks.hlo_analysis import analyse_hlo
+    mesh = make_host_mesh()
+
+    def prog(x):
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, P()))
+
+    # trivial: no collectives on a 1-device mesh, just exercise the parser
+    hlo = jax.jit(lambda x: x.sum()).lower(jnp.ones((8, 8))).compile().as_text()
+    out = analyse_hlo(hlo)
+    assert out["collective_bytes"] == 0
+
+
+def test_dryrun_collective_regex():
+    from repro.launch.dryrun import collective_stats
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[64]{0} all-gather-start(%y), dimensions={0}
+  %done = bf16[64]{0} all-gather-done(%ag.1)
+"""
+    out = collective_stats(hlo)
+    assert out["all-reduce"]["bytes"] == 128 * 256 * 4
+    assert out["total_bytes"] >= 128 * 256 * 4

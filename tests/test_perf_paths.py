@@ -1,0 +1,125 @@
+"""The §Perf optimization paths vs their exact references."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+
+# ------------------------------------------------------------ chunked wkv
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 32, 64]),
+       st.sampled_from([1, 2]), st.sampled_from([2, 4]))
+def test_wkv_chunked_equals_scan(seed, t, b, h):
+    from repro.models.rwkv6 import _wkv_chunked, _wkv_scan
+    dh = 8
+    rng = np.random.default_rng(seed)
+    mk = lambda: jnp.asarray(rng.standard_normal((b, t, h * dh)),
+                             jnp.float32)
+    r, k, v = mk(), mk(), mk()
+    dec = rng.standard_normal((b, t, h * dh)).astype(np.float32) - 1.5
+    logw = jnp.asarray(-np.exp(dec))
+    u = jnp.asarray(rng.standard_normal((h, dh)), jnp.float32)
+    y1, s1 = _wkv_scan(r, k, v, jnp.exp(logw), u, h, dh)
+    y2, s2 = _wkv_chunked(r, k, v, logw, u, h, dh)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv_chunked_extreme_decay_stable():
+    """Strong decays (w→0) and weak decays (w→1) must not overflow."""
+    from repro.models.rwkv6 import _wkv_chunked
+    b, t, h, dh = 1, 32, 2, 8
+    rng = np.random.default_rng(0)
+    mk = lambda: jnp.asarray(rng.standard_normal((b, t, h * dh)), jnp.float32)
+    for offset in (-8.0, +3.0):   # w ≈ 1 / w ≈ 0
+        dec = np.full((b, t, h * dh), offset, np.float32)
+        logw = jnp.asarray(-np.exp(dec))
+        y, s = _wkv_chunked(mk(), mk(), mk(), logw,
+                            jnp.zeros((h, dh)), h, dh)
+        assert bool(jnp.isfinite(y).all()) and bool(jnp.isfinite(s).all())
+
+
+# ------------------------------------------------------- capacity dispatch
+def _moe_setup(seed=0, e=4, d=32, f=64, t=64, k=2):
+    from repro.configs import smoke_config
+    import dataclasses
+    cfg = dataclasses.replace(
+        smoke_config("mixtral-8x7b", layers=2),
+        num_experts=e, experts_per_token=k, d_model=d, d_ff=f)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    experts = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+    gates = jax.nn.softmax(jnp.asarray(rng.standard_normal((t, k)),
+                                       jnp.float32), -1)
+    w = lambda *s: jnp.asarray(0.1 * rng.standard_normal(s), jnp.float32)
+    return cfg, x, experts, gates, w(e, d, f), w(e, d, f), w(e, f, d)
+
+
+def test_capacity_dispatch_matches_ragged_when_capacity_suffices():
+    from repro.models.moe import _dispatch_capacity, _dispatch_local
+    cfg, x, ex, ga, wg, wu, wd = _moe_setup()
+    t, k = ex.shape
+    y_ragged = _dispatch_local(x, ex, ga, wg, wu, wd, cfg.num_experts, 0)
+    y_cap = _dispatch_capacity(x, ex, ga, wg, wu, wd, cfg.num_experts,
+                               capacity=t * k)   # no drops possible
+    np.testing.assert_allclose(np.asarray(y_cap, np.float32),
+                               np.asarray(y_ragged, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_capacity_dispatch_drops_overflow_only():
+    """With capacity < max group, only overflow rows vanish; kept rows
+    match the exact dispatch computed on the kept subset."""
+    from repro.models.moe import _dispatch_capacity
+    cfg, x, ex, ga, wg, wu, wd = _moe_setup(seed=3)
+    # route EVERYTHING to expert 0 to force overflow
+    ex0 = jnp.zeros_like(ex)
+    cap = 16
+    y = _dispatch_capacity(x, ex0, ga, wg, wu, wd, cfg.num_experts, cap)
+    # tokens holding the first `cap` assignment slots keep output;
+    # the rest are zero (both of each token's k=2 assignments overflow
+    # or sit in slots; token rows beyond cap//k first tokens are zero)
+    nz = np.abs(np.asarray(y)).sum(axis=1) > 0
+    assert nz.sum() <= cap          # at most `cap` assignments served
+    assert nz[: cap // ex.shape[1]].all()
+
+
+def test_capacity_dispatch_empty_experts():
+    from repro.models.moe import _dispatch_capacity
+    cfg, x, ex, ga, wg, wu, wd = _moe_setup(seed=5)
+    y = _dispatch_capacity(x, jnp.full_like(ex, 3), ga, wg, wu, wd,
+                           cfg.num_experts, capacity=512)
+    assert bool(jnp.isfinite(y).all())
+
+
+# ----------------------------------------------------- loss-shift rolling
+def test_loss_shift_roll_equals_slice_semantics():
+    """The rolled-target loss equals the sliced-version loss exactly."""
+    from repro.configs import smoke_config
+    from repro.models.transformer import (chunked_xent, embed_tokens,
+                                          init_params, loss_fn)
+    cfg = smoke_config("qwen2.5-3b", layers=2)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    loss_rolled, _ = loss_fn(params, {"tokens": tokens}, cfg)
+
+    # hand-computed sliced version through the same trunk
+    from repro.models.transformer import _run_trunk, apply_norm, lm_logits
+    x = embed_tokens(params["embed"], tokens, cfg)
+    pos = jnp.arange(16, dtype=jnp.int32)
+    x, _, _ = _run_trunk(params, x, cfg, pos, None, None)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params["embed"], x, cfg).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits[:, :-1], axis=-1)
+    gold = jnp.take_along_axis(logits[:, :-1],
+                               tokens[:, 1:, None], axis=-1)[..., 0]
+    ce = (lse - gold).mean()
+    z = jnp.square(lse).mean()
+    np.testing.assert_allclose(float(loss_rolled), float(ce + 1e-4 * z),
+                               rtol=2e-3)

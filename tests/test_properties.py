@@ -1,0 +1,121 @@
+"""Hypothesis property tests over arbitrary generated graphs: system
+invariants of the reordering machinery and the relabeling contract."""
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.csr import from_edges, validate_permutation
+from repro.core.lorder import form_localities, lorder, lorder_v2
+from repro.core.baselines import (dbg_order, hubcluster_order, norder_order,
+                                  sorder_order, sort_order)
+from repro.core.diameter import estimate_diameter
+from repro.core.traversal import bfs_levels
+
+
+@st.composite
+def graphs(draw, max_v: int = 64, max_e: int = 256):
+    n = draw(st.integers(min_value=1, max_value=max_v))
+    m = draw(st.integers(min_value=0, max_value=max_e))
+    src = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    dst = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    return from_edges(n, np.array(src, np.int64), np.array(dst, np.int64))
+
+
+@st.composite
+def graph_and_kappa(draw):
+    g = draw(graphs())
+    k = draw(st.integers(min_value=1, max_value=8))
+    return g, k
+
+
+@settings(max_examples=60, deadline=None)
+@given(graph_and_kappa())
+def test_lorder_always_bijective(gk):
+    g, k = gk
+    perm = lorder(g, kappa=k)
+    assert validate_permutation(np.asarray(perm), g.num_vertices)
+
+
+@settings(max_examples=60, deadline=None)
+@given(graph_and_kappa())
+def test_localities_partition_vertices(gk):
+    g, k = gk
+    members, info = form_localities(g, kappa=k, hot=g.hot_mask())
+    cat = np.concatenate(members) if members else np.empty(0, np.int64)
+    assert sorted(cat.tolist()) == list(range(g.num_vertices))
+    assert (info.sizes >= 1).all()
+    # seeds are the first member of their locality
+    for s, m in zip(info.seeds, members):
+        assert m[0] == s
+
+
+@settings(max_examples=40, deadline=None)
+@given(graphs())
+def test_baselines_bijective(g):
+    for fn in (sort_order, dbg_order, hubcluster_order, norder_order,
+               lorder_v2):
+        assert validate_permutation(np.asarray(fn(g)), g.num_vertices)
+    assert validate_permutation(
+        np.asarray(sorder_order(g, hot_threshold=None)), g.num_vertices)
+
+
+@settings(max_examples=40, deadline=None)
+@given(graphs(max_v=32, max_e=128), st.integers(0, 10_000))
+def test_relabel_preserves_multigraph(g, seed):
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(g.num_vertices)
+    gp = g.apply_permutation(perm)
+    orig = g.edge_multiset()
+    mapped = np.stack([perm[orig[:, 0]], perm[orig[:, 1]]], 1)
+    order = np.lexsort((mapped[:, 1], mapped[:, 0]))
+    assert np.array_equal(mapped[order], gp.edge_multiset())
+
+
+@settings(max_examples=40, deadline=None)
+@given(graphs(max_v=32, max_e=128), st.integers(0, 10_000))
+def test_bfs_levels_permutation_equivariant(g, seed):
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(g.num_vertices)
+    gp = g.apply_permutation(perm)
+    src = int(rng.integers(g.num_vertices))
+    d1 = bfs_levels(g, src)
+    d2 = bfs_levels(gp, int(perm[src]))
+    assert np.array_equal(d1, d2[perm])
+
+
+def _exact_diameter(g):
+    und = g.undirected
+    best = 0
+    for v in range(und.num_vertices):
+        d = bfs_levels(und, v)
+        best = max(best, int(d.max()))
+    return best
+
+
+@settings(max_examples=30, deadline=None)
+@given(graphs(max_v=48))
+def test_diameter_estimate_is_sound_lower_bound(g):
+    """Double-sweep ≤ exact diameter; exact diameter is relabel-invariant.
+    (The estimate itself is a heuristic whose tie-breaking is id-dependent,
+    so only the bound — not the estimate — is a structural invariant.)"""
+    exact = _exact_diameter(g)
+    est = estimate_diameter(g)
+    assert est <= exact
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(g.num_vertices)
+    gp = g.apply_permutation(perm)
+    assert _exact_diameter(gp) == exact
+    assert estimate_diameter(gp) <= exact
+
+
+@settings(max_examples=40, deadline=None)
+@given(graphs(max_v=48, max_e=192))
+def test_hot_mask_threshold_semantics(g):
+    hot = g.hot_mask()
+    thr = g.average_degree
+    assert np.array_equal(hot, g.degree > thr)
+    # hot vertices are a minority for any skewed distribution with a mean
+    # threshold... not guaranteed in adversarial graphs, but the count must
+    # be consistent
+    assert 0 <= hot.sum() <= g.num_vertices

@@ -1,0 +1,164 @@
+"""Reordering schemes: permutation validity + scheme-specific invariants,
+including the paper's LOrder Algorithms 1 & 2 invariants."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import (dbg_order, gorder_order, hubcluster_order,
+                                  hubsort_order, identity_order, norder_order,
+                                  random_order, reordering_registry,
+                                  sort_order, sorder_order)
+from repro.core.csr import validate_permutation
+from repro.core.lorder import assign_ids, form_localities, lorder, lorder_v2
+
+ALL_SCHEMES = sorted(reordering_registry())
+
+
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_scheme_returns_valid_permutation(scheme, any_graph):
+    g = any_graph
+    perm = reordering_registry()[scheme](g)
+    assert validate_permutation(np.asarray(perm), g.num_vertices), scheme
+
+
+def test_sort_order_descending_degree(plc_graph):
+    g = plc_graph
+    perm = sort_order(g)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(g.num_vertices)
+    degs = g.degree[inv]          # degree by new id
+    assert np.all(np.diff(degs.astype(np.int64)) <= 0)
+
+
+def test_hubcluster_hot_first(plc_graph):
+    g = plc_graph
+    hot = g.hot_mask()
+    perm = hubcluster_order(g)
+    nhot = int(hot.sum())
+    assert np.all(perm[hot] < nhot)
+    assert np.all(perm[~hot] >= nhot)
+
+
+def test_dbg_preserves_relative_order_within_group(plc_graph):
+    g = plc_graph
+    perm = dbg_order(g, num_groups=6)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(g.num_vertices)
+    # vertices with equal degree-group must appear in ascending original id
+    deg = g.degree.astype(np.float64)
+    avg = max(g.average_degree, 1.0)
+    thr = avg * (2.0 ** np.arange(4, -1, -1))
+    group = np.full(g.num_vertices, 5)
+    for gi, t in enumerate(thr):
+        group[(group == 5) & (deg > t)] = gi
+    for gi in range(6):
+        ids = inv[group[inv] == gi]
+        assert np.all(np.diff(ids) > 0), f"group {gi} reordered internally"
+
+
+def test_dbg_groups_are_contiguous_and_hot_first(plc_graph):
+    g = plc_graph
+    perm = dbg_order(g)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(g.num_vertices)
+    # max degree must be in the first position's group; degree of group
+    # representatives must be non-increasing by construction
+    assert g.degree[inv[0]] >= np.median(g.degree)
+
+
+# ------------------------------------------------------------------ LOrder
+def test_lorder_localities_disjoint_complete(plc_graph):
+    g = plc_graph
+    hot = g.hot_mask()
+    members, info = form_localities(g, kappa=3, hot=hot)
+    seen = np.concatenate(members)
+    assert len(seen) == g.num_vertices
+    assert len(np.unique(seen)) == g.num_vertices
+    assert info.sizes.sum() == g.num_vertices
+    # locality_id consistent with member lists
+    for li, m in enumerate(members):
+        assert np.all(info.locality_id[m] == li)
+
+
+def test_lorder_hotness_counts(plc_graph):
+    g = plc_graph
+    hot = g.hot_mask()
+    members, info = form_localities(g, kappa=3, hot=hot)
+    for li, m in enumerate(members):
+        assert info.hotness[li] == int(hot[m].sum())
+
+
+def test_lorder_localities_sorted_by_hotness(plc_graph):
+    g = plc_graph
+    perm, info = lorder(g, kappa=3, return_info=True)
+    hot = g.hot_mask()
+    members, _ = form_localities(g, kappa=3, hot=hot)
+    order = np.argsort(-info.hotness, kind="stable")
+    # blocks must appear in hotness-descending order of localities
+    start = 0
+    for li in order:
+        block = members[li]
+        ids = np.sort(perm[block])
+        assert ids[0] == start and ids[-1] == start + len(block) - 1, \
+            "locality block not contiguous in new id space"
+        start += len(block)
+
+
+def test_lorder_hot_before_cold_within_locality(plc_graph):
+    g = plc_graph
+    hot = g.hot_mask()
+    members, info = form_localities(g, kappa=3, hot=hot)
+    perm = assign_ids(members, info, hot)
+    for m in members:
+        seed, rest = m[0], m[1:]
+        if len(rest) == 0:
+            continue
+        h, c = rest[hot[rest]], rest[~hot[rest]]
+        if len(h) and len(c):
+            assert perm[h].max() < perm[c].min(), \
+                "cold vertex numbered before a hot one inside a locality"
+        # seed always first in its block
+        assert perm[seed] == perm[m].min()
+
+
+def test_lorder_kappa_default_uses_radius(ring_graph):
+    # should run without explicit kappa and produce a valid permutation
+    perm = lorder(ring_graph)
+    assert validate_permutation(np.asarray(perm), ring_graph.num_vertices)
+
+
+def test_lorder_v2_uses_ground_truth_communities(plc_graph):
+    g = plc_graph
+    assert g.communities is not None
+    perm, info = lorder_v2(g, return_info=True)
+    assert validate_permutation(np.asarray(perm), g.num_vertices)
+    # every community occupies a contiguous new-id block
+    labels = np.asarray(g.communities)
+    for c in np.unique(labels):
+        ids = np.sort(perm[labels == c])
+        assert ids[-1] - ids[0] == len(ids) - 1, f"community {c} fragmented"
+
+
+def test_lorder_v2_fallback_connected_components(grid_graph):
+    g = grid_graph
+    assert g.communities is None
+    perm = lorder_v2(g)
+    assert validate_permutation(np.asarray(perm), g.num_vertices)
+
+
+def test_sorder_parameters(plc_graph):
+    perm = sorder_order(plc_graph, kappa=2, hot_threshold=50.0)
+    assert validate_permutation(np.asarray(perm), plc_graph.num_vertices)
+
+
+def test_gorder_guard():
+    from repro.core.generators import rmat
+    g = rmat(10, edge_factor=4, seed=0)
+    with pytest.raises(ValueError):
+        gorder_order(g, max_vertices=100)
+
+
+def test_gorder_valid_small(tiny_graph):
+    perm = gorder_order(tiny_graph, window=3)
+    assert validate_permutation(np.asarray(perm), tiny_graph.num_vertices)
