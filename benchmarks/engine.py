@@ -1,0 +1,79 @@
+"""Engine harness — policy decisions, reorder cost, and amortization.
+
+For each dataset: register with the serving engine (policy decides a
+scheme from probes + volume hint), then measure batched multi-source BFS
+latency on the *original* layout vs the *served* layout directly, and
+report the wall-clock break-even query count next to the ledger's
+cache-model estimate. Emits benchmarks/results/engine.json.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import bench_suite, fmt_table, save_json, time_call
+
+
+def run(scale: float = 0.5, batch: int = 8, repeats: int = 5) -> list[dict]:
+    from repro.algos.graph_arrays import to_device
+    from repro.engine import EngineSession
+
+    session = EngineSession()
+    suite = dict(bench_suite(scale))
+    from repro.core.generators import road_grid
+    side = max(32, int(128 * np.sqrt(scale)))
+    suite["road-sim"] = road_grid(side, shortcuts=64, seed=13,
+                                  name="road-sim")
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for dname, g in suite.items():
+        gid = session.register(g, graph_id=dname, expected_queries=256)
+        entry = session.registry.get(gid)
+        srcs = rng.integers(0, g.num_vertices, size=batch).astype(np.int32)
+
+        ga_orig = to_device(g)
+        srcs_served = entry.perm[srcs].astype(np.int32)
+        t_before, _ = time_call(session.executor.run, ga_orig, "bfs", srcs,
+                                repeats=repeats)
+        t_after, _ = time_call(session.executor.run, entry.arrays, "bfs",
+                               srcs_served, repeats=repeats)
+        saving = t_before - t_after
+        wall_break_even = (entry.reorder_seconds / saving
+                           if saving > 1e-9 else float("inf"))
+        rec = next(r for r in session.policy.history if r.graph_id == gid)
+        rows.append({
+            "dataset": dname,
+            "scheme": entry.decision.scheme,
+            "kwargs": entry.decision.kwargs,
+            "reason": entry.decision.reason,
+            "reorder_seconds": round(entry.reorder_seconds, 4),
+            "predicted_gain": rec.decision.predicted_gain,
+            "realized_gain": round(rec.realized_gain, 4),
+            "batch": int(batch),
+            "query_seconds_before": round(t_before, 5),
+            "query_seconds_after": round(t_after, 5),
+            "wall_break_even_queries": (round(wall_break_even, 1)
+                                        if np.isfinite(wall_break_even)
+                                        else "inf"),
+        })
+        print(f"[engine] {dname}: {entry.decision.scheme} "
+              f"{entry.decision.kwargs}, reorder "
+              f"{entry.reorder_seconds:.2f}s, query "
+              f"{t_before * 1e3:.1f}ms -> {t_after * 1e3:.1f}ms", flush=True)
+
+    out = {"rows": rows, "executor": session.executor.telemetry()}
+    save_json("engine", out)
+    return rows
+
+
+def main(scale: float = 0.5):
+    rows = run(scale)
+    cols = ["dataset", "scheme", "reorder_seconds", "predicted_gain",
+            "realized_gain", "query_seconds_before", "query_seconds_after",
+            "wall_break_even_queries"]
+    print("\n=== engine policy + amortization ===")
+    print(fmt_table(rows, cols))
+
+
+if __name__ == "__main__":
+    main()

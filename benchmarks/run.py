@@ -12,7 +12,8 @@ import time
 
 
 HARNESSES = ("skew", "reorder_time", "cache_stats", "kappa_sweep",
-             "speedups", "vocab_locality", "moe_locality", "roofline")
+             "speedups", "engine", "vocab_locality", "moe_locality",
+             "roofline")
 
 
 def main() -> None:
@@ -40,6 +41,9 @@ def main() -> None:
             m(min(args.scale, 0.25))
         elif name == "speedups":
             from .speedups import main as m
+            m(args.scale)
+        elif name == "engine":
+            from .engine import main as m
             m(args.scale)
         elif name == "vocab_locality":
             from .vocab_locality import main as m

@@ -28,10 +28,8 @@ PLOT_KERNELS = ("bfs", "pr", "cc", "ccsv", "bc")
 
 def _cache_cfg(g):
     """LLC sized so the property array is ~8× capacity (paper regime)."""
-    from repro.cache.sim import CacheConfig
-    prop_bytes = g.num_vertices * 4
-    size = max(8 * 1024, int(prop_bytes / 8))
-    return CacheConfig(size_bytes=size, ways=16, sample_rate=8)
+    from repro.cache.sim import scaled_config
+    return scaled_config(g)
 
 
 def _run_kernel(name, ga):

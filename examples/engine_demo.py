@@ -1,0 +1,87 @@
+"""Engine demo — adaptive reordering + batched multi-source serving.
+
+Registers two structurally opposite graphs with the serving engine:
+
+* a power-law community graph (high degree skew, low diameter) — the
+  regime where the paper's reordering pays, so the policy reorders;
+* a high-diameter road mesh (uniform degrees) — no hub working set, so
+  the policy serves the original layout.
+
+Then submits batched multi-source BFS / SSSP / BC queries through the
+session and verifies the answers match the single-source kernels on the
+original layout, and prints the telemetry (compile-cache hits, policy
+predicted-vs-realized gains, amortization ledger).
+
+Run:  PYTHONPATH=src python examples/engine_demo.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.algos.graph_arrays import to_device
+from repro.algos import kernels as K
+from repro.core.generators import powerlaw_community, road_grid
+from repro.engine import EngineSession
+
+
+def main():
+    print("== 1. register two structurally opposite graphs")
+    session = EngineSession()
+    g_pl = powerlaw_community(20_000, avg_degree=12.0, mixing=0.1,
+                              seed=7, name="social")
+    g_mesh = road_grid(100, shortcuts=32, seed=11, name="road")
+    ids = [session.register(g_pl, expected_queries=256),
+           session.register(g_mesh, expected_queries=256)]
+    for gid in ids:
+        e = session.registry.get(gid)
+        p, d = e.probes, e.decision
+        print(f"   {gid:8s} V={p.num_vertices:6d} gini={p.degree_gini:.3f} "
+              f"hub_mass={p.hub_mass:.3f} D~{p.diameter:3d} "
+              f"-> {d.scheme} {d.kwargs}")
+    schemes = {session.registry.get(gid).decision.scheme for gid in ids}
+    assert len(schemes) == 2, "policy should pick different reorderings"
+
+    print("== 2. batched multi-source queries match single-source kernels")
+    rng = np.random.default_rng(0)
+    for gid, g in zip(ids, (g_pl, g_mesh)):
+        srcs = rng.integers(0, g.num_vertices, size=5)
+        ga = to_device(g)  # original layout, reference path
+        depth = session.submit(gid, "bfs", srcs)
+        dist = session.submit(gid, "sssp", srcs)
+        for i, s in enumerate(srcs):
+            assert np.array_equal(depth[i],
+                                  np.asarray(K.bfs(ga, jnp.int32(s))))
+            assert np.array_equal(dist[i],
+                                  np.asarray(K.sssp(ga, jnp.int32(s))))
+        bc = session.bc_aggregate(gid, srcs)
+        np.testing.assert_allclose(bc, np.asarray(K.bc(ga, srcs)),
+                                   rtol=1e-4, atol=1e-4)
+        print(f"   {gid:8s} bfs/sssp/bc x{len(srcs)} sources: parity OK")
+
+    print("== 3. serve a query stream (compile cache + amortization)")
+    for _ in range(8):
+        for gid, g in zip(ids, (g_pl, g_mesh)):
+            srcs = rng.integers(0, g.num_vertices, size=4)
+            session.submit(gid, "bfs", srcs)
+
+    t = session.telemetry()
+    ex = t["executor"]
+    print(f"   compile cache: {ex['compile_cache_hits']} hits / "
+          f"{ex['compile_cache_misses']} misses over "
+          f"{ex['queries_run']} queries ({ex['sources_run']} sources)")
+    for rec in t["policy"]:
+        print(f"   policy {rec['graph_id']:8s} {rec['scheme']:10s} "
+              f"predicted gain {rec['predicted_gain']:.3f} "
+              f"realized {rec['realized_gain']:.3f}")
+    for gid in ids:
+        led = t["graphs"][gid]["ledger"]
+        be = led["break_even_queries"]
+        be_s = f"{be:.1f}" if np.isfinite(be) else "inf"
+        print(f"   ledger {gid:8s} reorder {led['reorder_seconds']:.3f}s, "
+              f"{led['queries_served']} queries, "
+              f"saved~{led['estimated_saved_seconds']:.3f}s, "
+              f"break-even at {be_s} queries, "
+              f"amortized={led['amortized']}")
+
+
+if __name__ == "__main__":
+    main()

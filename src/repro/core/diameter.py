@@ -33,6 +33,23 @@ def estimate_diameter(g: Graph, sweeps: int = 4, seed: int = 0) -> int:
     return int(best)
 
 
+def two_sweep_diameter(g: Graph) -> int:
+    """Single double-sweep diameter lower bound — the engine's cheap probe.
+
+    Two BFS passes total (vs ``estimate_diameter``'s iterated sweeps plus
+    random restarts): BFS from the highest-degree vertex, then BFS from the
+    farthest vertex found. Within a few percent of the iterated bound on
+    the paper's graph families at a fraction of the probe cost.
+    """
+    und = g.undirected
+    start = int(np.argmax(und.out_degree))
+    far, ecc = farthest_vertex(und, start)
+    if ecc == 0:
+        return 0
+    _, ecc2 = farthest_vertex(und, far)
+    return int(max(ecc, ecc2))
+
+
 def default_kappa(g: Graph, diameter: int | None = None) -> int:
     """κ = ⌈D / 2⌉ — the radius (paper Table 5.2)."""
     d = estimate_diameter(g) if diameter is None else diameter

@@ -22,6 +22,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.6 exposes shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:  # 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from .csr import Graph
 
 
@@ -81,7 +86,7 @@ def make_distributed_pagerank(g: Graph, mesh: Mesh, axis: str = "data",
         out = (1.0 - damping) / n + damping * (summed + dangling / n)
         return out[None]
 
-    sharded_step = jax.jit(jax.shard_map(
+    sharded_step = jax.jit(_shard_map(
         step, mesh=mesh,
         in_specs=(P(axis), P(axis, None), P(axis, None), P(axis, None),
                   P(axis), P(axis)),

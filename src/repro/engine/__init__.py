@@ -1,0 +1,18 @@
+"""Graph analytics serving engine (docs/engine.md).
+
+Turns the one-shot reproduction benchmarks into a serving system: a
+registry of probed graphs, an adaptive reorder policy that decides *when*
+and *how* to reorder from cheap structural probes plus expected query
+volume, a compile-cached batched executor, and a session front-end with
+an amortization ledger.
+"""
+from .executor import BatchedExecutor
+from .policy import PolicyDecision, PolicyRecord, ReorderPolicy
+from .registry import GraphProbes, GraphRegistry, probe_graph
+from .session import AmortizationLedger, EngineSession
+
+__all__ = [
+    "AmortizationLedger", "BatchedExecutor", "EngineSession",
+    "GraphProbes", "GraphRegistry", "PolicyDecision", "PolicyRecord",
+    "ReorderPolicy", "probe_graph",
+]

@@ -1,0 +1,111 @@
+"""Graph registry: per-graph serving state + cheap structural probes.
+
+The engine's reorder policy needs exactly the structural facts the paper
+shows modulate reordering payoff — degree skew (§2.1 hotness) and diameter
+(the κ = D/2 analysis) — but must obtain them at a cost far below a
+reorder pass. The probes here are O(E) single passes: a degree Gini
+coefficient, the hot-vertex fraction and hot edge mass (λ = avg degree,
+the paper's threshold), and a single double-sweep BFS diameter bound.
+
+Registry entries carry everything serving needs per graph: the original
+layout (query ids stay in this space), the chosen permutation and its
+inverse, the reordered ("served") layout, and the device arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from ..core.csr import Graph
+from ..core.diameter import two_sweep_diameter
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphProbes:
+    """Cheap structural summary feeding the reorder policy."""
+
+    num_vertices: int
+    num_edges: int
+    avg_degree: float
+    degree_gini: float    # 0 = uniform degrees, →1 = extreme skew
+    hub_fraction: float   # fraction of vertices with degree > λ (avg)
+    hub_mass: float       # fraction of total degree held by hub vertices
+    diameter: int         # double-sweep BFS lower bound
+    probe_seconds: float
+
+
+def degree_gini(degrees: np.ndarray) -> float:
+    """Gini coefficient of the degree distribution (skew probe)."""
+    d = np.sort(degrees.astype(np.float64))
+    n = len(d)
+    total = d.sum()
+    if n == 0 or total == 0:
+        return 0.0
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    return float(2.0 * (ranks * d).sum() / (n * total) - (n + 1) / n)
+
+
+def probe_graph(g: Graph) -> GraphProbes:
+    """Compute all policy probes in one pass over degrees + two BFS."""
+    t0 = time.perf_counter()
+    deg = g.degree
+    hot = g.hot_mask()
+    total = float(deg.sum())
+    return GraphProbes(
+        num_vertices=g.num_vertices,
+        num_edges=g.num_edges,
+        avg_degree=g.average_degree,
+        degree_gini=degree_gini(deg),
+        hub_fraction=float(hot.mean()) if g.num_vertices else 0.0,
+        hub_mass=float(deg[hot].sum() / total) if total else 0.0,
+        diameter=two_sweep_diameter(g),
+        probe_seconds=time.perf_counter() - t0,
+    )
+
+
+@dataclasses.dataclass
+class GraphEntry:
+    """Per-graph serving state. Fields after ``expected_queries`` are
+    populated by the session once the policy has run."""
+
+    graph_id: str
+    graph: Graph                      # original layout (query id space)
+    probes: GraphProbes
+    expected_queries: int
+    perm: np.ndarray | None = None    # perm[old_id] = served_id
+    inv_perm: np.ndarray | None = None
+    served: Graph | None = None       # reordered layout actually executed
+    arrays: object | None = None      # GraphArrays of `served`
+    reorder_seconds: float = 0.0
+    decision: object | None = None    # engine.policy.PolicyDecision
+    ledger: object | None = None      # engine.session.AmortizationLedger
+
+
+class GraphRegistry:
+    """Ingests graphs, probes them, and holds serving state by id."""
+
+    def __init__(self):
+        self._entries: dict[str, GraphEntry] = {}
+
+    def add(self, graph: Graph, graph_id: str | None = None,
+            expected_queries: int = 64) -> GraphEntry:
+        gid = graph_id or graph.name
+        if gid in self._entries:
+            raise KeyError(f"graph id {gid!r} already registered")
+        entry = GraphEntry(gid, graph, probe_graph(graph), expected_queries)
+        self._entries[gid] = entry
+        return entry
+
+    def get(self, graph_id: str) -> GraphEntry:
+        return self._entries[graph_id]
+
+    def ids(self) -> list[str]:
+        return list(self._entries)
+
+    def __contains__(self, graph_id: str) -> bool:
+        return graph_id in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)

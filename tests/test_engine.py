@@ -1,0 +1,207 @@
+"""Serving engine: probes, policy decisions, executor cache, session parity."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.algos import kernels as K
+from repro.algos.graph_arrays import to_device
+from repro.core.generators import powerlaw_community, road_grid
+from repro.engine import (BatchedExecutor, EngineSession, ReorderPolicy,
+                          probe_graph)
+from repro.engine.registry import degree_gini
+
+
+# ----------------------------------------------------------------- probes
+def test_degree_gini_bounds():
+    assert degree_gini(np.full(100, 7)) == pytest.approx(0.0, abs=1e-9)
+    extreme = np.zeros(1000, np.int64)
+    extreme[0] = 10_000
+    assert degree_gini(extreme) > 0.99
+    assert degree_gini(np.empty(0, np.int64)) == 0.0
+
+
+def test_probes_separate_regimes(plc_graph, grid_graph):
+    p_skew = probe_graph(plc_graph)
+    p_mesh = probe_graph(grid_graph)
+    assert p_skew.degree_gini > 0.3 > p_mesh.degree_gini
+    assert p_mesh.diameter > p_skew.diameter
+    assert p_skew.num_vertices == plc_graph.num_vertices
+    assert p_skew.num_edges == plc_graph.num_edges
+
+
+# ----------------------------------------------------------------- policy
+def test_policy_volume_gate(plc_graph):
+    pol = ReorderPolicy()
+    probes = probe_graph(plc_graph)
+    d = pol.decide(probes, expected_queries=1)
+    assert d.scheme == "original" and d.predicted_gain == 0.0
+
+
+def test_policy_skew_gate(grid_graph):
+    pol = ReorderPolicy()
+    d = pol.decide(probe_graph(grid_graph), expected_queries=1000)
+    assert d.scheme == "original"
+
+
+def test_policy_tiers(plc_graph):
+    pol = ReorderPolicy()
+    probes = probe_graph(plc_graph)
+    cheap = pol.decide(probes, expected_queries=8)
+    rich = pol.decide(probes, expected_queries=500)
+    assert cheap.scheme in ("hubcluster", "dbg")
+    assert rich.scheme == "lorder"
+    # kappa derives from the diameter probe: ceil(D/2)
+    assert rich.kwargs["kappa"] == max(1, (probes.diameter + 1) // 2)
+    assert rich.predicted_gain > cheap.predicted_gain > 0
+
+
+def test_policy_record_tracks_realized_gain(plc_graph):
+    pol = ReorderPolicy()
+    d = pol.decide(probe_graph(plc_graph), expected_queries=500)
+    rec = pol.record("g", d, miss_rate_before=0.5, miss_rate_after=0.3,
+                     reorder_seconds=1.0)
+    assert rec.realized_gain == pytest.approx(0.4)
+    assert pol.history == [rec]
+
+
+# --------------------------------------------------------------- executor
+def test_executor_compile_cache_keys(plc_graph, grid_graph):
+    ex = BatchedExecutor()
+    ga1, ga2 = to_device(plc_graph), to_device(grid_graph)
+    srcs = np.array([0, 1], np.int32)
+    ex.run(ga1, "bfs", srcs)
+    assert (ex.cache_hits, ex.cache_misses) == (0, 1)
+    ex.run(ga1, "bfs", np.array([5], np.int32))
+    assert (ex.cache_hits, ex.cache_misses) == (1, 1)
+    ex.run(ga2, "bfs", srcs)  # different (V, E) -> new entry
+    assert (ex.cache_hits, ex.cache_misses) == (1, 2)
+    t = ex.telemetry()
+    assert t["queries_run"] == 3 and t["sources_run"] == 5
+
+
+def test_executor_ragged_batches_match_single(tiny_graph):
+    ex = BatchedExecutor()
+    ga = to_device(tiny_graph)
+    for srcs in ([3], [0, 1, 2], list(range(7))):  # pads to 1 / 4 / 8
+        out = np.asarray(ex.run(ga, "bfs", np.asarray(srcs)))
+        assert out.shape == (len(srcs), tiny_graph.num_vertices)
+        for i, s in enumerate(srcs):
+            np.testing.assert_array_equal(
+                out[i], np.asarray(K.bfs(ga, jnp.int32(s))))
+
+
+def test_executor_global_kernels(plc_graph):
+    ex = BatchedExecutor()
+    ga = to_device(plc_graph)
+    pr = ex.run(ga, "pr")
+    np.testing.assert_allclose(np.asarray(pr), np.asarray(K.pagerank(ga)),
+                               rtol=1e-5, atol=1e-8)
+    with pytest.raises(ValueError):
+        ex.run(ga, "nope")
+    with pytest.raises(ValueError):
+        ex.run(ga, "bfs", np.empty(0, np.int32))
+
+
+# ---------------------------------------------------------------- session
+@pytest.fixture(scope="module")
+def served_session():
+    session = EngineSession()
+    g_pl = powerlaw_community(1500, avg_degree=10.0, seed=3, name="pl")
+    g_mesh = road_grid(25, shortcuts=6, seed=5, name="mesh")
+    session.register(g_pl, expected_queries=256)
+    session.register(g_mesh, expected_queries=256)
+    return session, g_pl, g_mesh
+
+
+def test_session_policy_differs_by_structure(served_session):
+    session, _, _ = served_session
+    d_pl = session.registry.get("pl").decision
+    d_mesh = session.registry.get("mesh").decision
+    assert d_pl.scheme == "lorder" and d_mesh.scheme == "original"
+
+
+def test_session_multi_source_parity(served_session):
+    session, g_pl, g_mesh = served_session
+    rng = np.random.default_rng(1)
+    for gid, g in (("pl", g_pl), ("mesh", g_mesh)):
+        srcs = rng.integers(0, g.num_vertices, size=3)
+        ga = to_device(g)
+        depth = session.submit(gid, "bfs", srcs)
+        dist = session.submit(gid, "sssp", srcs)
+        for i, s in enumerate(srcs):
+            np.testing.assert_array_equal(
+                depth[i], np.asarray(K.bfs(ga, jnp.int32(s))))
+            np.testing.assert_array_equal(
+                dist[i], np.asarray(K.sssp(ga, jnp.int32(s))))
+        np.testing.assert_allclose(
+            session.bc_aggregate(gid, srcs),
+            np.asarray(K.bc(ga, srcs)), rtol=1e-4, atol=1e-4)
+
+
+def test_session_global_kernel_parity(served_session):
+    session, g_pl, _ = served_session
+    got = session.submit("pl", "pr")
+    want = np.asarray(K.pagerank(to_device(g_pl)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-8)
+
+
+def test_session_telemetry_and_ledger(served_session):
+    session, g_pl, _ = served_session
+    session.submit("pl", "bfs", [0, 1, 2, 3])
+    t = session.telemetry()
+    assert t["executor"]["compile_cache_misses"] >= 1
+    assert len(t["policy"]) == 2
+    led = t["graphs"]["pl"]["ledger"]
+    assert led["queries_served"] >= 1
+    assert led["reorder_seconds"] > 0
+    # reordered power-law graph should realize a miss-rate reduction
+    rec = next(r for r in t["policy"] if r["graph_id"] == "pl")
+    assert rec["realized_gain"] > 0
+    assert 0 <= rec["predicted_gain"] <= 1
+
+
+def test_session_duplicate_id_rejected(served_session):
+    session, g_pl, _ = served_session
+    with pytest.raises(KeyError):
+        session.register(g_pl, graph_id="pl")
+
+
+# ------------------------------------------------- batched kernel parity
+def test_bc_batched_matches_python_loop(plc_graph):
+    """The vmapped bc() must reproduce the former per-source loop."""
+    ga = to_device(plc_graph)
+    srcs = np.array([0, 11, 42, 77], np.int32)
+    loop = jnp.zeros((ga.num_vertices,), jnp.float32)
+    for s in srcs:
+        loop = loop + K.bc_single_source(ga, jnp.int32(s))
+    np.testing.assert_allclose(np.asarray(K.bc(ga, srcs)),
+                               np.asarray(loop), rtol=1e-5, atol=1e-5)
+
+
+def test_multi_source_kernels_match_single(tiny_graph):
+    ga = to_device(tiny_graph)
+    srcs = jnp.asarray(np.arange(tiny_graph.num_vertices), jnp.int32)
+    bm = np.asarray(K.bfs_multi(ga, srcs))
+    sm = np.asarray(K.sssp_multi(ga, srcs))
+    cm = np.asarray(K.bc_multi(ga, srcs))
+    for s in range(tiny_graph.num_vertices):
+        np.testing.assert_array_equal(
+            bm[s], np.asarray(K.bfs(ga, jnp.int32(s))))
+        np.testing.assert_array_equal(
+            sm[s], np.asarray(K.sssp(ga, jnp.int32(s))))
+        np.testing.assert_allclose(
+            cm[s], np.asarray(K.bc_single_source(ga, jnp.int32(s))),
+            rtol=1e-5, atol=1e-5)
+
+
+def test_bc_weighted_masks_padding(tiny_graph):
+    ga = to_device(tiny_graph)
+    srcs = jnp.asarray([0, 2, 2], jnp.int32)   # lane 2 is padding
+    w = jnp.asarray([1.0, 1.0, 0.0])
+    got = K.bc_weighted(ga, srcs, w)
+    want = (K.bc_single_source(ga, jnp.int32(0))
+            + K.bc_single_source(ga, jnp.int32(2)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

@@ -3,6 +3,9 @@ invariants of the reordering machinery and the relabeling contract."""
 from __future__ import annotations
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.csr import from_edges, validate_permutation
