@@ -1,10 +1,23 @@
-"""Engine harness — policy decisions, reorder cost, and amortization.
+"""Engine harness — policy decisions, amortization, and the closed loop.
 
-For each dataset: register with the serving engine (policy decides a
-scheme from probes + volume hint), then measure batched multi-source BFS
-latency on the *original* layout vs the *served* layout directly, and
-report the wall-clock break-even query count next to the ledger's
-cache-model estimate. Emits benchmarks/results/engine.json.
+Three phases, one session:
+
+1. **Decisions + amortization** — for each dataset: register with the
+   serving engine (policy decides a scheme from probes + volume hint),
+   then measure batched multi-source BFS latency on the *original* vs the
+   *served* layout directly, and report the wall-clock break-even query
+   count next to the ledger's cache-model estimate. Each registration's
+   realized gain also feeds the strength calibrator.
+2. **Online re-decision** — serve a synthetic bursty workload whose
+   realized volume diverges from its registration hint and report the
+   re-decisions the session makes (original -> cheap tier -> LOrder).
+3. **Decisions after calibration** — replay a recorded outcome stream in
+   which LOrder keeps realizing almost nothing (the misprediction regime
+   Faldu et al. document), then re-run the policy on every dataset's
+   probes: decisions that flip show the calibrated strengths overriding
+   the static tree.
+
+Emits benchmarks/results/engine.json.
 """
 from __future__ import annotations
 
@@ -13,16 +26,8 @@ import numpy as np
 from .common import bench_suite, fmt_table, save_json, time_call
 
 
-def run(scale: float = 0.5, batch: int = 8, repeats: int = 5) -> list[dict]:
+def _phase_decisions(session, suite, batch, repeats):
     from repro.algos.graph_arrays import to_device
-    from repro.engine import EngineSession
-
-    session = EngineSession()
-    suite = dict(bench_suite(scale))
-    from repro.core.generators import road_grid
-    side = max(32, int(128 * np.sqrt(scale)))
-    suite["road-sim"] = road_grid(side, shortcuts=64, seed=13,
-                                  name="road-sim")
 
     rng = np.random.default_rng(0)
     rows = []
@@ -60,8 +65,89 @@ def run(scale: float = 0.5, batch: int = 8, repeats: int = 5) -> list[dict]:
               f"{entry.decision.kwargs}, reorder "
               f"{entry.reorder_seconds:.2f}s, query "
               f"{t_before * 1e3:.1f}ms -> {t_after * 1e3:.1f}ms", flush=True)
+    return rows
 
-    out = {"rows": rows, "executor": session.executor.telemetry()}
+
+def _phase_redecision(session, scale):
+    """Bursty workload: hint says 2 queries, reality delivers ~40."""
+    from repro.core.generators import powerlaw_community
+
+    g = powerlaw_community(max(2000, int(20_000 * scale)), avg_degree=12.0,
+                           mixing=0.1, seed=21, name="burst")
+    gid = session.register(g, graph_id="burst", expected_queries=2)
+    entry = session.registry.get(gid)
+    first = entry.decision.scheme
+    rng = np.random.default_rng(5)
+    for _ in range(40):
+        session.submit(gid, "bfs", rng.integers(0, g.num_vertices, size=4))
+    events = [e for e in session.redecision_log if e["graph_id"] == gid]
+    print(f"[engine] burst workload: hint=2, served "
+          f"{entry.queries_observed} batches, {len(events)} re-decisions: "
+          + " -> ".join([first] + [e["new_scheme"] for e in events]),
+          flush=True)
+    return {
+        "dataset": "burst",
+        "expected_queries_hint": 2,
+        "queries_observed": entry.queries_observed,
+        "scheme_path": [first] + [e["new_scheme"] for e in events],
+        "redecision_count": len(events),
+        "events": events,
+    }
+
+
+def _phase_calibration_flip(session, suite):
+    """Replay outcomes where LOrder collapses; re-decide every dataset."""
+    policy = session.policy
+    pre = {d: policy.decide(session.registry.get(d).probes, 256).scheme
+           for d in suite}
+    from repro.engine import PolicyDecision, ReorderPolicy
+
+    probes = session.registry.get("burst").probes
+    skew = ReorderPolicy._skew(probes)
+    lorder = PolicyDecision("lorder", {}, "replayed historical decision",
+                            0.75 * skew, skew)
+    for i in range(25):
+        # recorded outcome: near-zero realized reduction despite high skew
+        policy.record(f"replay-{i}", lorder, miss_rate_before=0.5,
+                      miss_rate_after=0.49, reorder_seconds=1.0)
+    post = {d: policy.decide(session.registry.get(d).probes, 256).scheme
+            for d in suite}
+    changed = {d: (pre[d], post[d]) for d in suite if pre[d] != post[d]}
+    cal = policy.calibrator
+    print(f"[engine] after calibration replay: lorder strength "
+          f"{cal.strength('lorder'):.3f} (prior 0.75), "
+          f"{len(changed)} decision(s) changed: "
+          + (", ".join(f"{d}: {a}->{b}" for d, (a, b) in changed.items())
+             or "none"), flush=True)
+    return {
+        "strengths_after": cal.strengths(),
+        "decisions_before": pre,
+        "decisions_after": post,
+        "changed": {d: list(v) for d, v in changed.items()},
+    }
+
+
+def run(scale: float = 0.5, batch: int = 8, repeats: int = 5) -> list[dict]:
+    from repro.core.generators import road_grid
+    from repro.engine import EngineSession
+
+    session = EngineSession()
+    suite = dict(bench_suite(scale))
+    side = max(32, int(128 * np.sqrt(scale)))
+    suite["road-sim"] = road_grid(side, shortcuts=64, seed=13,
+                                  name="road-sim")
+
+    rows = _phase_decisions(session, suite, batch, repeats)
+    redecision = _phase_redecision(session, scale)
+    flip = _phase_calibration_flip(session, suite)
+
+    out = {
+        "rows": rows,
+        "redecision": redecision,
+        "calibration_flip": flip,
+        "calibration": session.policy.calibrator.as_dict(),
+        "executor": session.executor.telemetry(),
+    }
     save_json("engine", out)
     return rows
 

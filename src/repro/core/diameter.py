@@ -1,8 +1,8 @@
 """Diameter estimation (double-sweep BFS) and the paper's κ = D/2 rule.
 
-The paper's headline structural observation is that the optimal locality
-radius κ equals half the graph diameter ("κ is also referred to as the
-radius"). Diameter is estimated with the standard iterated double-sweep
+The paper's headline structural observation (Table 5.2) is that the
+optimal locality radius κ equals half the graph diameter ("κ is also
+referred to as the radius"). Diameter is estimated with the standard iterated double-sweep
 lower bound on the symmetrized graph — the same figure SNAP reports
 (longest shortest path, effective on the largest component).
 """

@@ -1,18 +1,23 @@
-"""Graph analytics serving engine (docs/engine.md).
+"""Graph analytics serving engine (docs/engine.md, docs/policy.md).
 
 Turns the one-shot reproduction benchmarks into a serving system: a
 registry of probed graphs, an adaptive reorder policy that decides *when*
 and *how* to reorder from cheap structural probes plus expected query
 volume, a compile-cached batched executor, and a session front-end with
-an amortization ledger.
+an amortization ledger. The loop is closed: realized outcomes calibrate
+the policy's per-scheme strengths (calibration.py), and the session
+re-decides — re-reordering in place — when realized traffic diverges
+from the registration hint or a reorder provably cannot amortize.
 """
+from .calibration import DEFAULT_PRIORS, SchemeStats, StrengthCalibrator
 from .executor import BatchedExecutor
 from .policy import PolicyDecision, PolicyRecord, ReorderPolicy
 from .registry import GraphProbes, GraphRegistry, probe_graph
 from .session import AmortizationLedger, EngineSession
 
 __all__ = [
-    "AmortizationLedger", "BatchedExecutor", "EngineSession",
-    "GraphProbes", "GraphRegistry", "PolicyDecision", "PolicyRecord",
-    "ReorderPolicy", "probe_graph",
+    "AmortizationLedger", "BatchedExecutor", "DEFAULT_PRIORS",
+    "EngineSession", "GraphProbes", "GraphRegistry", "PolicyDecision",
+    "PolicyRecord", "ReorderPolicy", "SchemeStats", "StrengthCalibrator",
+    "probe_graph",
 ]

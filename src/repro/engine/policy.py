@@ -1,9 +1,10 @@
 """Adaptive reorder policy: probes + expected query volume -> scheme.
 
-The paper's result is a trade-off, not a recommendation: reordering buys
-per-traversal speedup proportional to degree skew, at a one-time cost that
-only amortizes over enough traversals (Faldu et al. make the same point
-for the lightweight schemes). The policy encodes that trade-off:
+The paper's result (section 5) is a trade-off, not a recommendation:
+reordering buys per-traversal speedup proportional to degree skew, at a
+one-time cost that only amortizes over enough traversals (Faldu et al.
+make the same point for the lightweight schemes). The policy encodes that
+trade-off:
 
 * **volume gate** — below ``min_queries`` expected traversals nothing can
   amortize, serve the original layout;
@@ -14,25 +15,27 @@ for the lightweight schemes). The policy encodes that trade-off:
 * **expensive tier** — skewed graph and high volume: LOrder with
   κ = ⌈D/2⌉ derived from the registry's diameter probe (paper Table 5.2).
 
-Every decision carries a *predicted* fractional miss-rate reduction from a
-probe-only model; the session later records the *realized* reduction from
-the cache simulator, so mispredictions are visible in telemetry.
+Every decision carries a *predicted* fractional miss-rate reduction,
+``skew x strength[scheme]``. The strengths are **calibrated, not
+static**: the session records the *realized* reduction from the cache
+simulator into a ``StrengthCalibrator`` (see calibration.py), and later
+decisions consult the fitted strengths. Once a scheme has enough
+observations, a tier's default choice can be overridden by a candidate
+whose fitted predicted gain is higher by ``override_margin`` — so a
+scheme that consistently mispredicts loses decisions to the one that
+actually delivers (the top Engine item in ROADMAP.md).
 """
 from __future__ import annotations
 
 import dataclasses
 
 from ..core.baselines import reordering_registry
+from .calibration import DEFAULT_PRIORS, StrengthCalibrator
 from .registry import GraphProbes
 
-# Relative strength of each scheme at converting skew into miss reduction,
-# calibrated against benchmarks/speedups.py geomeans (original = 0).
-_SCHEME_STRENGTH = {
-    "original": 0.0,
-    "hubcluster": 0.35,
-    "dbg": 0.5,
-    "lorder": 0.75,
-}
+# Backwards-compatible alias: PR 1 exposed the static strengths here.
+# They are now the *priors* of the calibration model (calibration.py).
+_SCHEME_STRENGTH = DEFAULT_PRIORS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +44,7 @@ class PolicyDecision:
     kwargs: dict             # scheme arguments (e.g. probe-derived kappa)
     reason: str              # human-readable rule that fired
     predicted_gain: float    # predicted fractional miss-rate reduction
+    skew: float = 0.0        # probe composite the prediction was based on
 
 
 @dataclasses.dataclass
@@ -69,6 +73,7 @@ class PolicyRecord:
             "scheme": self.decision.scheme,
             "kwargs": self.decision.kwargs,
             "reason": self.decision.reason,
+            "skew": self.decision.skew,
             "predicted_gain": self.decision.predicted_gain,
             "realized_gain": self.realized_gain,
             "miss_rate_before": self.miss_rate_before,
@@ -78,53 +83,105 @@ class PolicyRecord:
 
 
 class ReorderPolicy:
-    """Threshold policy over (probes, expected query volume)."""
+    """Threshold policy over (probes, volume) with calibrated strengths."""
 
     def __init__(self, min_queries: int = 4, high_volume: int = 32,
-                 min_gini: float = 0.25, dbg_gini: float = 0.45):
+                 min_gini: float = 0.25, dbg_gini: float = 0.45,
+                 calibrator: StrengthCalibrator | None = None,
+                 min_calibration_samples: int = 5,
+                 override_margin: float = 0.05):
         self.min_queries = min_queries
         self.high_volume = high_volume
         self.min_gini = min_gini
         self.dbg_gini = dbg_gini
+        self.calibrator = calibrator or StrengthCalibrator()
+        self.min_calibration_samples = min_calibration_samples
+        self.override_margin = override_margin
         self.history: list[PolicyRecord] = []
 
     # ------------------------------------------------------------- decide
+    @staticmethod
+    def _skew(probes: GraphProbes) -> float:
+        """Probe composite: how much hot working set there is to pack."""
+        return min(probes.degree_gini * (0.5 + probes.hub_mass), 1.0)
+
     def _predict_gain(self, probes: GraphProbes, scheme: str) -> float:
-        """Probe-only payoff model: skew × hub mass × scheme strength."""
-        skew = min(probes.degree_gini * (0.5 + probes.hub_mass), 1.0)
-        return round(skew * _SCHEME_STRENGTH[scheme], 4)
+        """Payoff model: skew x fitted scheme strength."""
+        return round(self._skew(probes) * self.calibrator.strength(scheme),
+                     4)
+
+    def _scheme_kwargs(self, scheme: str, probes: GraphProbes) -> dict:
+        if scheme == "lorder":
+            return {"kappa": max(1, (probes.diameter + 1) // 2)}
+        return {}
+
+    def _calibrated_override(self, default: str, candidates: list[str],
+                             probes: GraphProbes) -> tuple[str, str | None]:
+        """Swap the tier default for a candidate with higher fitted gain.
+
+        Only fires once there is evidence to act on — the default or the
+        challenger has ``min_calibration_samples`` observations — so an
+        uncalibrated policy reproduces the static PR 1 decision tree
+        exactly. The margin keeps noise from flapping decisions.
+        """
+        cal, n_min = self.calibrator, self.min_calibration_samples
+        best, best_gain = default, self._predict_gain(probes, default)
+        for cand in candidates:
+            if cand == default:
+                continue
+            if cal.count(cand) < n_min and cal.count(default) < n_min:
+                continue
+            gain = self._predict_gain(probes, cand)
+            if gain > best_gain + self.override_margin:
+                best, best_gain = cand, gain
+        if best == default:
+            return default, None
+        note = (f"calibration override: fitted strength favours {best} "
+                f"({best_gain:.3f}) over {default} "
+                f"({self._predict_gain(probes, default):.3f}) by more than "
+                f"{self.override_margin}")
+        return best, note
 
     def decide(self, probes: GraphProbes,
                expected_queries: int) -> PolicyDecision:
+        candidates: list[str] = []
         if expected_queries < self.min_queries:
-            scheme, kwargs = "original", {}
+            scheme = "original"
             reason = (f"volume gate: {expected_queries} expected queries "
                       f"< {self.min_queries}, reorder cannot amortize")
         elif probes.degree_gini < self.min_gini:
-            scheme, kwargs = "original", {}
+            scheme = "original"
             reason = (f"skew gate: degree gini {probes.degree_gini:.3f} "
                       f"< {self.min_gini}, no hub working set to pack")
         elif expected_queries < self.high_volume:
+            candidates = ["hubcluster", "dbg"]
             if probes.degree_gini < self.dbg_gini:
-                scheme, kwargs = "hubcluster", {}
+                scheme = "hubcluster"
                 reason = (f"cheap tier: moderate skew "
                           f"(gini {probes.degree_gini:.3f}), single-pass "
                           f"hub clustering")
             else:
-                scheme, kwargs = "dbg", {}
+                scheme = "dbg"
                 reason = (f"cheap tier: high skew "
                           f"(gini {probes.degree_gini:.3f}), degree-based "
                           f"grouping")
         else:
-            kappa = max(1, (probes.diameter + 1) // 2)
-            scheme, kwargs = "lorder", {"kappa": kappa}
+            candidates = ["hubcluster", "dbg", "lorder"]
+            scheme = "lorder"
+            kappa = self._scheme_kwargs("lorder", probes)["kappa"]
             reason = (f"high volume ({expected_queries} >= "
                       f"{self.high_volume}) + skew "
                       f"(gini {probes.degree_gini:.3f}): LOrder with "
                       f"probe-derived kappa = ceil(D/2) = {kappa} "
                       f"(D ~ {probes.diameter})")
-        return PolicyDecision(scheme, kwargs, reason,
-                              self._predict_gain(probes, scheme))
+        if candidates:
+            scheme, note = self._calibrated_override(scheme, candidates,
+                                                     probes)
+            if note:
+                reason = f"{reason}; {note}"
+        return PolicyDecision(scheme, self._scheme_kwargs(scheme, probes),
+                              reason, self._predict_gain(probes, scheme),
+                              self._skew(probes))
 
     # -------------------------------------------------------------- apply
     def reorder_fn(self, decision: PolicyDecision):
@@ -135,7 +192,17 @@ class ReorderPolicy:
     def record(self, graph_id: str, decision: PolicyDecision,
                miss_rate_before: float, miss_rate_after: float,
                reorder_seconds: float) -> PolicyRecord:
+        """Log an outcome and feed it to the calibrator (the closed loop)."""
         rec = PolicyRecord(graph_id, decision, miss_rate_before,
                            miss_rate_after, reorder_seconds)
         self.history.append(rec)
+        self.calibrator.observe_record(rec)
         return rec
+
+    # ----------------------------------------------------------- persist
+    def save_calibration(self, path):
+        """Persist fitted strengths so calibration survives sessions."""
+        return self.calibrator.save(path)
+
+    def load_calibration(self, path) -> None:
+        self.calibrator = StrengthCalibrator.load(path)

@@ -9,7 +9,10 @@ the paper's threshold), and a single double-sweep BFS diameter bound.
 
 Registry entries carry everything serving needs per graph: the original
 layout (query ids stay in this space), the chosen permutation and its
-inverse, the reordered ("served") layout, and the device arrays.
+inverse, the reordered ("served") layout, and the device arrays. Entries
+also track *realized* query volume (``queries_observed``) independently
+of the amortization ledger — the ledger resets on every re-decision, but
+the volume history that triggers re-decisions must not.
 """
 from __future__ import annotations
 
@@ -73,7 +76,7 @@ class GraphEntry:
     graph_id: str
     graph: Graph                      # original layout (query id space)
     probes: GraphProbes
-    expected_queries: int
+    expected_queries: int             # volume hint; refreshed on re-decision
     perm: np.ndarray | None = None    # perm[old_id] = served_id
     inv_perm: np.ndarray | None = None
     served: Graph | None = None       # reordered layout actually executed
@@ -81,6 +84,8 @@ class GraphEntry:
     reorder_seconds: float = 0.0
     decision: object | None = None    # engine.policy.PolicyDecision
     ledger: object | None = None      # engine.session.AmortizationLedger
+    queries_observed: int = 0         # realized volume, survives re-decisions
+    redecisions: int = 0
 
 
 class GraphRegistry:
@@ -100,6 +105,12 @@ class GraphRegistry:
 
     def get(self, graph_id: str) -> GraphEntry:
         return self._entries[graph_id]
+
+    def note_queries(self, graph_id: str, n: int = 1) -> int:
+        """Count realized query batches against a graph; returns total."""
+        entry = self._entries[graph_id]
+        entry.queries_observed += n
+        return entry.queries_observed
 
     def ids(self) -> list[str]:
         return list(self._entries)

@@ -6,6 +6,15 @@ served layout, and opens an amortization ledger; ``submit`` translates
 query sources into the served id space, runs the batched executor, and
 translates results back — callers never see the internal layout.
 
+A registration-time decision is **not final**. The session tracks
+realized query volume per graph, and when it diverges from the
+registration hint past ``redecide_factor`` — or the ledger shows the
+chosen reorder will never amortize (realized gain <= 0) — it re-runs the
+policy with the updated volume and the calibrator's fitted strengths,
+re-reorders in place, and resets the ledger. Re-decisions are capped,
+logged, and visible in ``telemetry()`` (docs/policy.md walks the
+lifecycle).
+
 The ledger is deliberately conservative: reorder cost is *measured*;
 per-query savings are *estimated* from the cache simulator's realized
 miss-rate reduction applied to measured query wall time (wall time on
@@ -24,7 +33,7 @@ from ..algos.graph_arrays import to_device
 from ..cache.sim import estimate_miss_rate, scaled_config
 from ..core.csr import Graph
 from .executor import GLOBAL, MULTI_SOURCE, BatchedExecutor
-from .policy import ReorderPolicy
+from .policy import PolicyDecision, ReorderPolicy
 from .registry import GraphEntry, GraphRegistry
 
 
@@ -38,6 +47,7 @@ class AmortizationLedger:
     sources_served: int = 0
     query_seconds: float = 0.0
     estimated_saved_seconds: float = 0.0
+    estimated_lost_seconds: float = 0.0
 
     def record_query(self, num_sources: int, wall_seconds: float) -> None:
         self.queries_served += 1
@@ -48,6 +58,15 @@ class AmortizationLedger:
         gain = min(self.realized_gain, 0.95)
         if gain > 0:
             self.estimated_saved_seconds += wall_seconds * gain / (1 - gain)
+        elif gain < 0:
+            # a regressing reorder must not book negative "savings" that
+            # silently shrink the total — surface the loss on its own line
+            self.estimated_lost_seconds += wall_seconds * -gain / (1 - gain)
+
+    @property
+    def regressed(self) -> bool:
+        """True when the reorder made cache behaviour worse."""
+        return self.realized_gain < 0
 
     @property
     def amortized(self) -> bool:
@@ -63,6 +82,7 @@ class AmortizationLedger:
 
     def as_dict(self) -> dict:
         return {**dataclasses.asdict(self),
+                "regressed": self.regressed,
                 "amortized": self.amortized,
                 "break_even_queries": self.break_even_queries}
 
@@ -73,21 +93,35 @@ class EngineSession:
     def __init__(self, policy: ReorderPolicy | None = None,
                  registry: GraphRegistry | None = None,
                  executor: BatchedExecutor | None = None,
-                 cache_cfg=None):
+                 cache_cfg=None,
+                 redecide_factor: float = 4.0,
+                 redecide_min_queries: int = 8,
+                 max_redecisions: int = 3):
         self.policy = policy or ReorderPolicy()
         self.registry = registry or GraphRegistry()
         self.executor = executor or BatchedExecutor()
         self.cache_cfg = cache_cfg  # None = scaled_config per graph
+        self.redecide_factor = redecide_factor
+        self.redecide_min_queries = redecide_min_queries
+        self.max_redecisions = max_redecisions
+        self.redecision_log: list[dict] = []
 
     # ----------------------------------------------------------- register
     def register(self, graph: Graph, graph_id: str | None = None,
                  expected_queries: int = 64) -> str:
         entry = self.registry.add(graph, graph_id, expected_queries)
         decision = self.policy.decide(entry.probes, expected_queries)
-        entry.decision = decision
+        self._apply_decision(entry, decision)
+        return entry.graph_id
 
+    def _apply_decision(self, entry: GraphEntry,
+                        decision: PolicyDecision) -> None:
+        """Reorder ``entry.graph`` per ``decision`` and (re)build serving
+        state: permutations, served layout, device arrays, policy record,
+        fresh ledger. Used at registration and again on re-decision."""
+        entry.decision = decision
         t0 = time.perf_counter()
-        perm = np.asarray(self.policy.reorder_fn(decision)(graph))
+        perm = np.asarray(self.policy.reorder_fn(decision)(entry.graph))
         entry.reorder_seconds = time.perf_counter() - t0
 
         entry.perm = perm
@@ -97,12 +131,12 @@ class EngineSession:
         if decision.scheme == "original":
             # fast path: no reorder, no benefit to measure — skip the
             # (graph-sized) cache simulation entirely
-            entry.served = graph
+            entry.served = entry.graph
             before = after = 0.0
         else:
-            entry.served = graph.apply_permutation(perm)
-            cfg = self.cache_cfg or scaled_config(graph)
-            before = estimate_miss_rate(graph, cfg)
+            entry.served = entry.graph.apply_permutation(perm)
+            cfg = self.cache_cfg or scaled_config(entry.graph)
+            before = estimate_miss_rate(entry.graph, cfg)
             after = estimate_miss_rate(entry.served, cfg)
         # canonical_ids = inverse perm keeps SSSP edge weights identical to
         # the original layout, so served results match original-layout runs
@@ -112,7 +146,64 @@ class EngineSession:
                                  entry.reorder_seconds)
         entry.ledger = AmortizationLedger(entry.reorder_seconds,
                                           rec.realized_gain)
-        return entry.graph_id
+
+    # -------------------------------------------------------- re-decision
+    def _maybe_redecide(self, entry: GraphEntry) -> dict | None:
+        """Re-run the policy when realized traffic contradicts the hint.
+
+        Triggers: (a) realized volume exceeds the hint by
+        ``redecide_factor``; (b) the ledger shows the reorder will never
+        amortize (realized gain <= 0). The new decision uses the observed
+        volume and the calibrator's current fitted strengths; if it only
+        re-confirms a never-amortizing scheme, the graph is demoted to the
+        original layout instead — a regressing reorder is strictly worse
+        than serving the layout we already had.
+        """
+        if entry.redecisions >= self.max_redecisions:
+            return None
+        observed = entry.queries_observed
+        if observed < self.redecide_min_queries:
+            return None
+        old = entry.decision
+        if observed >= self.redecide_factor * max(entry.expected_queries, 1):
+            trigger = "volume-divergence"
+        elif old.scheme != "original" and entry.ledger.realized_gain <= 0:
+            trigger = "never-amortize"
+        else:
+            return None
+
+        new_volume = max(observed, entry.expected_queries)
+        new = self.policy.decide(entry.probes, new_volume)
+        if (trigger == "never-amortize"
+                and (new.scheme, new.kwargs) == (old.scheme, old.kwargs)):
+            new = PolicyDecision(
+                "original", {},
+                (f"re-decision demote: {old.scheme} realized gain "
+                 f"{entry.ledger.realized_gain:.3f} <= 0 after "
+                 f"{entry.ledger.queries_served} queries — it can never "
+                 f"amortize, serving the original layout"),
+                0.0, new.skew)
+        if (new.scheme, new.kwargs) == (old.scheme, old.kwargs):
+            # same choice at the new volume: refresh the hint so the
+            # divergence trigger re-arms at redecide_factor x observed
+            entry.expected_queries = new_volume
+            return None
+
+        self._apply_decision(entry, new)
+        entry.expected_queries = new_volume
+        entry.redecisions += 1
+        event = {
+            "graph_id": entry.graph_id,
+            "trigger": trigger,
+            "old_scheme": old.scheme,
+            "new_scheme": new.scheme,
+            "observed_queries": observed,
+            "new_expected_queries": new_volume,
+            "reorder_seconds": entry.reorder_seconds,
+            "reason": new.reason,
+        }
+        self.redecision_log.append(event)
+        return event
 
     # ------------------------------------------------------------- submit
     def submit(self, graph_id: str, kernel: str,
@@ -132,10 +223,15 @@ class EngineSession:
         out = np.asarray(self.executor.run(entry.arrays, kernel, sources))
         wall = time.perf_counter() - t0
         entry.ledger.record_query(num_sources, wall)
+        self.registry.note_queries(graph_id)
         # translate back: result for original vertex v lives at served
         # position perm[v] (label values — cc/ccsv — stay in served space
         # but remain consistent component ids)
-        return out[..., entry.perm]
+        result = out[..., entry.perm]
+        # re-decision runs after translation: this result used the old
+        # layout's perm; the next submit sees the new serving state
+        self._maybe_redecide(entry)
+        return result
 
     def bc_aggregate(self, graph_id: str, sources) -> np.ndarray:
         """GAP-style BC score: sum of per-source dependencies (V,)."""
@@ -146,11 +242,16 @@ class EngineSession:
         return {
             "executor": self.executor.telemetry(),
             "policy": [r.as_dict() for r in self.policy.history],
+            "calibration": self.policy.calibrator.as_dict(),
+            "redecisions": list(self.redecision_log),
             "graphs": {
                 gid: {
                     "scheme": e.decision.scheme if e.decision else None,
                     "probes": dataclasses.asdict(e.probes),
                     "reorder_seconds": e.reorder_seconds,
+                    "expected_queries": e.expected_queries,
+                    "queries_observed": e.queries_observed,
+                    "redecisions": e.redecisions,
                     "ledger": e.ledger.as_dict() if e.ledger else None,
                 }
                 for gid, e in ((g, self.registry.get(g))

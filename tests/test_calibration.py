@@ -1,0 +1,204 @@
+"""Calibration loop: strength fitting, persistence, online re-decision."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.generators import powerlaw_community
+from repro.engine import (DEFAULT_PRIORS, EngineSession, ReorderPolicy,
+                          StrengthCalibrator)
+from repro.engine.registry import GraphProbes
+from repro.engine.session import AmortizationLedger
+
+
+def _probes(gini=0.55, hub_mass=0.6, diameter=8) -> GraphProbes:
+    return GraphProbes(num_vertices=1000, num_edges=8000, avg_degree=8.0,
+                       degree_gini=gini, hub_fraction=0.2,
+                       hub_mass=hub_mass, diameter=diameter,
+                       probe_seconds=0.0)
+
+
+# -------------------------------------------------------------- fitting
+def test_calibrator_starts_at_priors():
+    cal = StrengthCalibrator()
+    for scheme, prior in DEFAULT_PRIORS.items():
+        assert cal.strength(scheme) == pytest.approx(prior)
+
+
+def test_calibrator_converges_to_generating_strength():
+    true_strength = 0.2   # far below the 0.75 prior
+    cal = StrengthCalibrator()
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        skew = rng.uniform(0.3, 0.9)
+        gain = true_strength * skew + rng.normal(0, 0.02)
+        cal.observe("lorder", skew, gain)
+    assert cal.strength("lorder") == pytest.approx(true_strength, abs=0.05)
+    assert cal.count("lorder") == 300
+
+
+def test_calibrator_shrinks_toward_prior_with_few_samples():
+    cal = StrengthCalibrator(shrinkage=2.0)
+    cal.observe("dbg", skew=0.5, realized_gain=0.0)  # one bad outcome
+    # one sample (skew^2 = 0.25) barely moves a shrinkage-2 estimate
+    assert cal.strength("dbg") > 0.8 * DEFAULT_PRIORS["dbg"]
+
+
+def test_calibrator_strength_clamped_and_original_pinned():
+    cal = StrengthCalibrator()
+    for _ in range(50):
+        cal.observe("dbg", 0.9, -5.0)
+    assert cal.strength("dbg") == 0.0
+    cal.observe("original", 0.9, 0.7)
+    assert cal.strength("original") == 0.0
+
+
+def test_calibrator_save_load_round_trip(tmp_path):
+    cal = StrengthCalibrator(shrinkage=3.5)
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        cal.observe("lorder", rng.uniform(0.2, 0.9), rng.uniform(0, 0.5))
+        cal.observe("hubcluster", rng.uniform(0.2, 0.9), rng.uniform(0, 0.3))
+    path = cal.save(tmp_path / "cal.json")
+    loaded = StrengthCalibrator.load(path)
+    assert loaded.shrinkage == cal.shrinkage
+    assert loaded.strengths() == cal.strengths()
+    assert loaded.count("lorder") == 20
+    # loaded state keeps accumulating identically
+    loaded.observe("lorder", 0.5, 0.1)
+    cal.observe("lorder", 0.5, 0.1)
+    assert loaded.strength("lorder") == pytest.approx(cal.strength("lorder"))
+    # custom priors round-trip without picking up default schemes
+    custom = StrengthCalibrator(priors={"lorder": 0.6})
+    reloaded = StrengthCalibrator.load(custom.save(tmp_path / "custom.json"))
+    assert set(reloaded.strengths()) == {"lorder"}
+    assert reloaded.strength("lorder") == pytest.approx(0.6)
+
+
+# ---------------------------------------------- policy consults the fit
+def test_policy_record_feeds_calibrator():
+    pol = ReorderPolicy()
+    d = pol.decide(_probes(), expected_queries=500)
+    assert d.scheme == "lorder" and d.skew > 0
+    pol.record("g", d, miss_rate_before=0.5, miss_rate_after=0.45,
+               reorder_seconds=1.0)
+    assert pol.calibrator.count("lorder") == 1
+    # "original" decisions and unmeasured records are not samples
+    d0 = pol.decide(_probes(), expected_queries=1)
+    pol.record("g0", d0, 0.0, 0.0, 0.0)
+    assert pol.calibrator.count("original") == 0
+
+
+def test_uncalibrated_policy_matches_static_tree():
+    pol = ReorderPolicy()
+    assert pol.decide(_probes(gini=0.35), 8).scheme == "hubcluster"
+    assert pol.decide(_probes(gini=0.55), 8).scheme == "dbg"
+    assert pol.decide(_probes(gini=0.55), 500).scheme == "lorder"
+
+
+def test_decision_changes_after_calibrating_on_outcomes():
+    pol = ReorderPolicy()
+    probes = _probes()
+    assert pol.decide(probes, 500).scheme == "lorder"
+    # recorded outcomes: lorder keeps realizing ~nothing on this workload
+    for i in range(12):
+        d = pol.decide(probes, 500)
+        pol.record(f"g{i}", d, miss_rate_before=0.5,
+                   miss_rate_after=0.49, reorder_seconds=1.0)
+    after = pol.decide(probes, 500)
+    assert after.scheme == "dbg"
+    assert "calibration override" in after.reason
+    assert pol.calibrator.strength("lorder") < 0.3
+
+
+def test_override_needs_margin_not_noise():
+    pol = ReorderPolicy()
+    probes = _probes()
+    # outcomes that roughly confirm the prior must not flip the decision
+    for i in range(12):
+        d = pol.decide(probes, 500)
+        pol.record(f"g{i}", d, miss_rate_before=0.5,
+                   miss_rate_after=0.5 * (1 - 0.7 * d.skew),
+                   reorder_seconds=1.0)
+    assert pol.decide(probes, 500).scheme == "lorder"
+
+
+# ------------------------------------------------------------ ledger fix
+def test_ledger_negative_gain_clamped_and_surfaced():
+    led = AmortizationLedger(reorder_seconds=1.0, realized_gain=-0.5)
+    led.record_query(num_sources=2, wall_seconds=0.3)
+    assert led.estimated_saved_seconds == 0.0
+    assert led.estimated_lost_seconds == pytest.approx(0.3 * 0.5 / 1.5)
+    d = led.as_dict()
+    assert d["regressed"] is True and d["amortized"] is False
+    good = AmortizationLedger(reorder_seconds=1.0, realized_gain=0.4)
+    good.record_query(1, 0.3)
+    assert good.estimated_saved_seconds == pytest.approx(0.3 * 0.4 / 0.6)
+    assert good.as_dict()["regressed"] is False
+
+
+# --------------------------------------------------------- re-decision
+@pytest.fixture(scope="module")
+def skewed_graph():
+    return powerlaw_community(1200, avg_degree=10.0, seed=3, name="plc")
+
+
+def test_redecision_fires_on_volume_divergence(skewed_graph):
+    session = EngineSession(redecide_min_queries=6, redecide_factor=3.0)
+    gid = session.register(skewed_graph, expected_queries=2)
+    entry = session.registry.get(gid)
+    assert entry.decision.scheme == "original"   # volume gate
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        session.submit(gid, "bfs", rng.integers(0, 1200, size=2))
+    assert entry.redecisions >= 1
+    ev = session.redecision_log[0]
+    assert ev["trigger"] == "volume-divergence"
+    assert ev["old_scheme"] == "original" and ev["new_scheme"] != "original"
+    # ledger was reset for the new layout
+    assert entry.ledger.queries_served < entry.queries_observed
+    assert entry.expected_queries >= 6
+    # served results remain correct post-re-reorder
+    import jax.numpy as jnp
+    from repro.algos import kernels as K
+    from repro.algos.graph_arrays import to_device
+    depth = session.submit(gid, "bfs", [17])
+    ref = np.asarray(K.bfs(to_device(skewed_graph), jnp.int32(17)))
+    np.testing.assert_array_equal(depth[0], ref)
+    assert session.telemetry()["redecisions"]
+
+
+def test_no_redecision_on_accurate_hint(skewed_graph):
+    session = EngineSession(redecide_min_queries=6)
+    gid = session.register(skewed_graph, expected_queries=256)
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        session.submit(gid, "bfs", rng.integers(0, 1200, size=2))
+    assert session.registry.get(gid).redecisions == 0
+    assert session.redecision_log == []
+
+
+def test_redecision_demotes_never_amortizing_reorder(skewed_graph):
+    session = EngineSession(redecide_min_queries=4)
+    gid = session.register(skewed_graph, expected_queries=64)
+    entry = session.registry.get(gid)
+    assert entry.decision.scheme != "original"
+    # simulate a regressing reorder: the cache model says it lost ground
+    entry.ledger.realized_gain = -0.2
+    rng = np.random.default_rng(2)
+    for _ in range(5):
+        session.submit(gid, "bfs", rng.integers(0, 1200, size=2))
+    assert entry.decision.scheme == "original"
+    ev = session.redecision_log[0]
+    assert ev["trigger"] == "never-amortize"
+    assert "demote" in ev["reason"]
+
+
+def test_redecision_count_is_capped(skewed_graph):
+    session = EngineSession(redecide_min_queries=2, redecide_factor=1.5,
+                            max_redecisions=1)
+    gid = session.register(skewed_graph, expected_queries=1)
+    rng = np.random.default_rng(3)
+    for _ in range(30):
+        session.submit(gid, "bfs", rng.integers(0, 1200, size=2))
+    assert session.registry.get(gid).redecisions == 1
