@@ -1,6 +1,6 @@
 """Engine harness — policy decisions, amortization, and the closed loop.
 
-Three phases, one session:
+Five phases:
 
 1. **Decisions + amortization** — for each dataset: register with the
    serving engine (policy decides a scheme from probes + volume hint),
@@ -16,10 +16,24 @@ Three phases, one session:
    Faldu et al. document), then re-run the policy on every dataset's
    probes: decisions that flip show the calibrated strengths overriding
    the static tree.
+4. **Shape bucketing** — serve a stream of distinct-shape graphs through
+   an exact-shape executor and a bucketed one; report the compile-miss
+   reduction and check bucketed results are bit-identical.
+5. **Sharded serving** — in a subprocess with 4 forced host devices,
+   register a graph whose CSR footprint exceeds the device budget and
+   serve BFS/SSSP/PR through ``EngineSession.submit``; report per-device
+   memory and wall-clock per kernel.
 
 Emits benchmarks/results/engine.json.
 """
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
 
 import numpy as np
 
@@ -36,11 +50,15 @@ def _phase_decisions(session, suite, batch, repeats):
         entry = session.registry.get(gid)
         srcs = rng.integers(0, g.num_vertices, size=batch).astype(np.int32)
 
+        # both layouts timed through the same exact-shape path, so the
+        # comparison isolates the *reordering* effect — the served
+        # handle's bucket padding would otherwise be booked as loss
         ga_orig = to_device(g)
+        ga_served = to_device(entry.served, canonical_ids=entry.inv_perm)
         srcs_served = entry.perm[srcs].astype(np.int32)
         t_before, _ = time_call(session.executor.run, ga_orig, "bfs", srcs,
                                 repeats=repeats)
-        t_after, _ = time_call(session.executor.run, entry.arrays, "bfs",
+        t_after, _ = time_call(session.executor.run, ga_served, "bfs",
                                srcs_served, repeats=repeats)
         saving = t_before - t_after
         wall_break_even = (entry.reorder_seconds / saving
@@ -127,6 +145,122 @@ def _phase_calibration_flip(session, suite):
     }
 
 
+def _phase_bucketing(scale, batch: int = 4):
+    """Distinct-shape graph stream: exact-shape vs bucketed compile counts."""
+    from repro.core.generators import powerlaw_community
+    from repro.engine import BatchedExecutor
+
+    sizes = [int(n * max(scale, 0.25) / 0.5)
+             for n in (1100, 1250, 1400, 1550, 1750, 1950)]
+    graphs = [powerlaw_community(n, avg_degree=8.0, seed=100 + i,
+                                 name=f"stream-{n}")
+              for i, n in enumerate(sizes)]
+    assert len({(g.num_vertices, g.num_edges) for g in graphs}) == len(graphs)
+
+    exact = BatchedExecutor(bucketing=False)
+    bucketed = BatchedExecutor()
+    rng = np.random.default_rng(9)
+    identical = True
+    for g in graphs:
+        srcs = rng.integers(0, g.num_vertices, size=batch).astype(np.int32)
+        out_e = np.asarray(exact.run(exact.prepare(g), "bfs", srcs))
+        out_b = np.asarray(bucketed.run(bucketed.prepare(g), "bfs", srcs))
+        identical &= bool(np.array_equal(out_e, out_b))
+    m_exact = exact.single.cache_misses
+    m_bucket = bucketed.single.cache_misses
+    buckets = bucketed.single.telemetry()["bucketing"]
+    print(f"[engine] bucketing: {len(graphs)} distinct shapes -> "
+          f"{m_exact} exact-shape compile misses vs {m_bucket} bucketed "
+          f"({m_exact / max(m_bucket, 1):.1f}x fewer), "
+          f"{buckets['distinct_buckets']} bucket(s), "
+          f"bit-identical={identical}", flush=True)
+    return {
+        "graph_shapes": [[g.num_vertices, g.num_edges] for g in graphs],
+        "compile_misses_exact": m_exact,
+        "compile_misses_bucketed": m_bucket,
+        "compile_reduction_x": round(m_exact / max(m_bucket, 1), 2),
+        "buckets": buckets,
+        "bit_identical": identical,
+    }
+
+
+def _phase_sharded(scale):
+    """4 forced host devices: serve an over-budget graph end-to-end.
+
+    Runs in a subprocess because ``xla_force_host_platform_device_count``
+    must be set before jax initializes its backends.
+    """
+    n = max(2000, int(20_000 * scale))
+    prog = textwrap.dedent(f"""
+        import json, time
+        import numpy as np
+        import jax, jax.numpy as jnp
+        assert jax.device_count() == 4, jax.devices()
+        from repro.algos import kernels as K
+        from repro.algos.graph_arrays import to_device
+        from repro.core.generators import powerlaw_community
+        from repro.engine import EngineSession, estimate_device_bytes
+
+        g = powerlaw_community({n}, avg_degree=10.0, seed=31, name="big")
+        budget = estimate_device_bytes(g.num_vertices, g.num_edges) // 2
+        session = EngineSession(device_budget_bytes=budget)
+        gid = session.register(g, expected_queries=256)
+        entry = session.registry.get(gid)
+        assert entry.backend == "sharded", entry.backend
+        srcs = np.arange(4) * (g.num_vertices // 5)
+        ga = to_device(g)
+        walls, parity = {{}}, {{}}
+        for kernel in ("bfs", "sssp", "pr"):
+            args = (srcs,) if kernel != "pr" else ()
+            t0 = time.perf_counter()
+            out = session.submit(gid, kernel, *args)
+            walls[kernel] = time.perf_counter() - t0
+        d = session.submit(gid, "bfs", srcs)
+        parity["bfs"] = all(
+            np.array_equal(d[i], np.asarray(K.bfs(ga, jnp.int32(s))))
+            for i, s in enumerate(srcs))
+        parity["pr"] = bool(np.allclose(
+            session.submit(gid, "pr"), np.asarray(K.pagerank(ga)),
+            rtol=1e-4, atol=1e-7))
+        print("RESULT " + json.dumps({{
+            "num_vertices": g.num_vertices,
+            "num_edges": g.num_edges,
+            "device_budget_bytes": budget,
+            "graph_bytes": estimate_device_bytes(g.num_vertices,
+                                                 g.num_edges),
+            "per_device_bytes": entry.handle.device_bytes,
+            "num_shards": session.executor.sharded.num_shards,
+            "wall_seconds": {{k: round(v, 4) for k, v in walls.items()}},
+            "parity": parity,
+            "ledger_backend": entry.ledger.backend,
+            "gain_discount": entry.ledger.gain_discount,
+        }}))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), env.get("PYTHONPATH", "")]).rstrip(
+        os.pathsep)
+    res = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        print(f"[engine] sharded phase FAILED:\n{res.stderr}", flush=True)
+        return {"error": res.stderr[-2000:]}
+    line = next(l for l in res.stdout.splitlines() if l.startswith("RESULT "))
+    out = json.loads(line[len("RESULT "):])
+    print(f"[engine] sharded: V={out['num_vertices']} across "
+          f"{out['num_shards']} devices "
+          f"(~{out['per_device_bytes'] / 1e6:.2f} MB/device vs "
+          f"{out['graph_bytes'] / 1e6:.2f} MB whole), walls "
+          + ", ".join(f"{k}={v * 1e3:.0f}ms"
+                      for k, v in out["wall_seconds"].items())
+          + f", parity={out['parity']}", flush=True)
+    return out
+
+
 def run(scale: float = 0.5, batch: int = 8, repeats: int = 5) -> list[dict]:
     from repro.core.generators import road_grid
     from repro.engine import EngineSession
@@ -140,11 +274,15 @@ def run(scale: float = 0.5, batch: int = 8, repeats: int = 5) -> list[dict]:
     rows = _phase_decisions(session, suite, batch, repeats)
     redecision = _phase_redecision(session, scale)
     flip = _phase_calibration_flip(session, suite)
+    bucketing = _phase_bucketing(scale)
+    sharded = _phase_sharded(scale)
 
     out = {
         "rows": rows,
         "redecision": redecision,
         "calibration_flip": flip,
+        "bucketing": bucketing,
+        "sharded": sharded,
         "calibration": session.policy.calibrator.as_dict(),
         "executor": session.executor.telemetry(),
     }

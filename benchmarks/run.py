@@ -2,9 +2,10 @@
 # locality tables + the roofline report. Results land in
 # benchmarks/results/*.json and are summarized in EXPERIMENTS.md.
 #
-#   PYTHONPATH=src python -m benchmarks.run                 # everything
-#   PYTHONPATH=src python -m benchmarks.run --only skew     # one harness
-#   PYTHONPATH=src python -m benchmarks.run --scale 0.25    # smaller graphs
+#   PYTHONPATH=src python -m benchmarks.run                      # everything
+#   PYTHONPATH=src python -m benchmarks.run --only skew          # one harness
+#   PYTHONPATH=src python -m benchmarks.run --only engine,skew   # a subset
+#   PYTHONPATH=src python -m benchmarks.run --scale 0.25         # smaller
 from __future__ import annotations
 
 import argparse
@@ -16,14 +17,27 @@ HARNESSES = ("skew", "reorder_time", "cache_stats", "kappa_sweep",
              "roofline")
 
 
+def parse_only(value: str | None) -> list[str]:
+    """Comma-separated harness subset -> validated list (None = all)."""
+    if not value:
+        return list(HARNESSES)
+    names = [n.strip() for n in value.split(",") if n.strip()]
+    unknown = sorted(set(names) - set(HARNESSES))
+    if unknown:
+        raise SystemExit(f"unknown harness(es) {', '.join(unknown)}; "
+                         f"choose from {', '.join(HARNESSES)}")
+    return names
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=HARNESSES)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ", ".join(HARNESSES))
     ap.add_argument("--scale", type=float, default=0.5,
                     help="graph-size multiplier for the paper suite")
     args = ap.parse_args()
 
-    todo = [args.only] if args.only else list(HARNESSES)
+    todo = parse_only(args.only)
     for name in todo:
         t0 = time.time()
         print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}", flush=True)

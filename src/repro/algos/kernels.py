@@ -4,6 +4,14 @@ Each kernel is edge-parallel (COO segment ops) with `lax.while_loop`
 outer iteration — the JAX-native rendering of the level-synchronous /
 iterative structure the paper's C++ GAPS kernels use. All are `jit`-able;
 vertex property arrays are the reuse-heavy state the paper reorders for.
+
+Bucket padding: when a `GraphArrays` carries ``vertex_valid`` /
+``edge_valid`` masks (shape-bucketed uploads, see engine/backends.py),
+every kernel excludes sentinel edges and padded vertices, so results on
+the real ``[:V]`` prefix are exactly the unpadded results. The masks are
+``None`` for unpadded uploads and the branches below are resolved at
+trace time, so unbucketed serving lowers to the identical XLA program as
+before.
 """
 from __future__ import annotations
 
@@ -45,6 +53,8 @@ def bfs(g: GraphArrays, source: jnp.ndarray) -> jnp.ndarray:
         # gather(prop, src) over the edge array: the hot access the paper
         # optimizes — property reads follow g.indices / g.src layout.
         active = front[g.src]
+        if g.edge_valid is not None:
+            active &= g.edge_valid
         touched = _seg_max(active, g.indices, n)
         new = touched & (depth < 0)
         depth = jnp.where(new, level + 1, depth)
@@ -62,9 +72,22 @@ def pagerank(g: GraphArrays, num_iters: int = 20, damping: float = 0.85,
 
 @jax.jit
 def _pagerank(g: GraphArrays, num_iters, damping, tol):
-    """Pull-mode PR: r[v] = (1-d)/N + d * Σ_{u→v} r[u]/outdeg[u]."""
+    """Pull-mode PR: r[v] = (1-d)/N + d * Σ_{u→v} r[u]/outdeg[u].
+
+    With bucket masks, N is the count of *real* vertices and all rank mass
+    (base, dangling redistribution, the rank vector itself) stays on real
+    vertices; padded vertices hold rank 0 throughout, so the real prefix
+    matches the unpadded run.
+    """
     n = g.num_vertices
-    base = (1.0 - damping) / n
+    valid = g.vertex_valid
+    if valid is None:
+        n_real = jnp.float32(n)
+        dangling_mask = g.out_degree == 0
+    else:
+        n_real = valid.sum().astype(jnp.float32)
+        dangling_mask = (g.out_degree == 0) & valid
+    base = (1.0 - damping) / n_real
     outdeg = jnp.maximum(g.out_degree, 1).astype(jnp.float32)
 
     def body(state):
@@ -73,8 +96,10 @@ def _pagerank(g: GraphArrays, num_iters, damping, tol):
         # pull over in-CSR: gather(contrib, t_indices) is the reuse-heavy read
         summed = _seg_sum(contrib[g.t_indices], g.t_dst, n)
         # dangling mass redistributed uniformly (GAP semantics)
-        dangling = jnp.where(g.out_degree == 0, r, 0.0).sum()
-        r_new = base + damping * (summed + dangling / n)
+        dangling = jnp.where(dangling_mask, r, 0.0).sum()
+        r_new = base + damping * (summed + dangling / n_real)
+        if valid is not None:
+            r_new = jnp.where(valid, r_new, 0.0)
         err = jnp.abs(r_new - r).sum()
         return r_new, err, it + 1
 
@@ -82,7 +107,9 @@ def _pagerank(g: GraphArrays, num_iters, damping, tol):
         _, err, it = state
         return (it < num_iters) & (err > tol)
 
-    r0 = jnp.full((n,), 1.0 / n, jnp.float32)
+    r0 = jnp.ones((n,), jnp.float32) / n_real
+    if valid is not None:
+        r0 = jnp.where(valid, r0, 0.0)
     r, _, _ = lax.while_loop(cond, body, (r0, jnp.float32(jnp.inf), jnp.int32(0)))
     return r
 
@@ -95,8 +122,12 @@ def cc_labelprop(g: GraphArrays) -> jnp.ndarray:
 
     def body(state):
         lab, _ = state
-        m1 = _seg_min(lab[g.src], g.indices, n)
-        m2 = _seg_min(lab[g.indices], g.src, n)
+        lab_src, lab_dst = lab[g.src], lab[g.indices]
+        if g.edge_valid is not None:
+            lab_src = jnp.where(g.edge_valid, lab_src, INF_I32)
+            lab_dst = jnp.where(g.edge_valid, lab_dst, INF_I32)
+        m1 = _seg_min(lab_src, g.indices, n)
+        m2 = _seg_min(lab_dst, g.src, n)
         new = jnp.minimum(lab, jnp.minimum(m1, m2))
         return new, (new != lab).any()
 
@@ -121,6 +152,10 @@ def cc_shiloach_vishkin(g: GraphArrays) -> jnp.ndarray:
         # hook: root(pu) adopts smaller pv (and symmetrically)
         lo = jnp.minimum(pu, pv)
         hi = jnp.maximum(pu, pv)
+        if g.edge_valid is not None:
+            # sentinel edges hook nothing: min with INF is a no-op
+            lo = jnp.where(g.edge_valid, lo, INF_I32)
+            hi = jnp.where(g.edge_valid, hi, 0)
         parent1 = parent.at[hi].min(lo)
         # pointer jumping to full compression
         def jump(st):
@@ -147,6 +182,8 @@ def sssp(g: GraphArrays, source: jnp.ndarray) -> jnp.ndarray:
         dist, _, it = state
         du = dist[g.src]
         cand = jnp.where(du == INF_I32, INF_I32, du + g.weights)
+        if g.edge_valid is not None:
+            cand = jnp.where(g.edge_valid, cand, INF_I32)
         relaxed = _seg_min(cand, g.indices, n)
         new = jnp.minimum(dist, relaxed)
         return new, (new != dist).any(), it + 1
@@ -172,6 +209,8 @@ def bc_single_source(g: GraphArrays, source: jnp.ndarray) -> jnp.ndarray:
     du = depth[g.src]
     dv = depth[g.indices]
     tree_edge = (dv == du + 1) & (du >= 0)
+    if g.edge_valid is not None:
+        tree_edge &= g.edge_valid
 
     def fwd(level, sigma):
         mask = tree_edge & (du == level)

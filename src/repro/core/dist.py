@@ -30,8 +30,13 @@ except AttributeError:  # 0.4.x: experimental namespace
 from .csr import Graph
 
 
-def partition_edges(g: Graph, num_shards: int):
-    """Split COO edges by dst range; pad shards to equal edge counts."""
+def partition_edges(g: Graph, num_shards: int, edge_values=None):
+    """Split COO edges by dst range; pad shards to equal edge counts.
+
+    ``edge_values`` (optional, aligned with the graph's out-CSR edge
+    order, e.g. SSSP weights) is partitioned identically and returned as
+    a fifth array.
+    """
     n = g.num_vertices
     per = -(-n // num_shards)  # dst ids [i*per, (i+1)*per)
     src = g.edge_src.astype(np.int32)
@@ -44,12 +49,19 @@ def partition_edges(g: Graph, num_shards: int):
     s_pad = np.zeros((num_shards, emax), np.int32)
     d_pad = np.zeros((num_shards, emax), np.int32)
     valid = np.zeros((num_shards, emax), bool)
+    if edge_values is not None:
+        vals = np.asarray(edge_values)[order]
+        v_pad = np.zeros((num_shards, emax), vals.dtype)
     off = 0
     for i, c in enumerate(counts):
         s_pad[i, :c] = src[off:off + c]
         d_pad[i, :c] = dst[off:off + c] - i * per  # local dst index
         valid[i, :c] = True
+        if edge_values is not None:
+            v_pad[i, :c] = vals[off:off + c]
         off += c
+    if edge_values is not None:
+        return s_pad, d_pad, valid, per, v_pad
     return s_pad, d_pad, valid, per
 
 
@@ -107,4 +119,131 @@ def make_distributed_pagerank(g: Graph, mesh: Mesh, axis: str = "data",
 def lower_distributed_pagerank(g: Graph, mesh: Mesh, axis: str = "data"):
     """Lower+compile one sharded PR step (dry-run hook for the graph engine)."""
     run, _ = make_distributed_pagerank(g, mesh, axis, num_iters=1)
+    return run
+
+
+# ------------------------------------------------- multi-source traversals
+#
+# Serving parity with the single-device engine: batched BFS / SSSP where
+# the (S, V) property matrix is sharded along the *vertex* axis and each
+# level/relaxation step all-gathers it. The outer iteration is a host
+# loop with a device-side convergence flag (same structure as the PR
+# driver above) — one sharded launch per level, bounded by eccentricity
+# (BFS) or V (Bellman-Ford).
+
+_INF_I32 = np.int32(2**31 - 1)
+
+
+def _put_state(values: np.ndarray, mesh: Mesh, axis: str):
+    """Upload an (S, n_pad) property matrix sharded over its vertex axis."""
+    return jax.device_put(values, NamedSharding(mesh, P(None, axis)))
+
+
+def make_distributed_bfs(g: Graph, mesh: Mesh, axis: str = "data"):
+    """Returns run(sources) -> (S, V) BFS depths over `axis` of `mesh`."""
+    num_shards = mesh.shape[axis]
+    s_pad, d_pad, valid, per = partition_edges(g, num_shards)
+    n, n_pad = g.num_vertices, per * num_shards
+    espec = NamedSharding(mesh, P(axis, None))
+    s_sh = jax.device_put(s_pad, espec)
+    d_sh = jax.device_put(d_pad, espec)
+    v_sh = jax.device_put(valid, espec)
+
+    def step(depth, front, level, src_e, dst_e, val_e):
+        # depth/front: (S, per) local vertex slices; edges: (1, e_local)
+        full_front = jax.lax.all_gather(front, axis, axis=1, tiled=True)
+        active = full_front[:, src_e[0]] & val_e[0]           # (S, e_local)
+        touched = jax.vmap(
+            lambda a: jax.ops.segment_max(a, dst_e[0], num_segments=per)
+        )(active)
+        new = touched & (depth < 0)
+        depth = jnp.where(new, level + 1, depth)
+        # replicated scalar per the P() out_spec: the host loop reads one
+        # flag instead of reducing the whole sharded frontier each level
+        alive = jax.lax.psum(new.any().astype(jnp.int32), axis)
+        return depth, new, alive > 0
+
+    sharded_step = jax.jit(_shard_map(
+        step, mesh=mesh,
+        in_specs=(P(None, axis), P(None, axis), P(),
+                  P(axis, None), P(axis, None), P(axis, None)),
+        out_specs=(P(None, axis), P(None, axis), P()),
+    ))
+
+    def run(sources):
+        srcs = np.atleast_1d(np.asarray(sources, np.int64))
+        s = srcs.size
+        depth0 = np.full((s, n_pad), -1, np.int32)
+        depth0[np.arange(s), srcs] = 0
+        front0 = np.zeros((s, n_pad), bool)
+        front0[np.arange(s), srcs] = True
+        depth = _put_state(depth0, mesh, axis)
+        front = _put_state(front0, mesh, axis)
+        # do-while: the initial frontier is never empty (sources exist)
+        for level in range(n):
+            depth, front, alive = sharded_step(depth, front,
+                                               jnp.int32(level),
+                                               s_sh, d_sh, v_sh)
+            if not bool(alive):
+                break
+        return depth[:, :n]
+
+    return run
+
+
+def make_distributed_sssp(g: Graph, mesh: Mesh, axis: str = "data",
+                          canonical_ids=None):
+    """Returns run(sources) -> (S, V) Bellman-Ford distances.
+
+    Weights are the engine's canonical per-edge hash
+    (`algos.graph_arrays.edge_weights`, relabel-invariant through
+    ``canonical_ids``), so sharded distances match the single-device
+    executor exactly.
+    """
+    from ..algos.graph_arrays import edge_weights
+
+    num_shards = mesh.shape[axis]
+    w = edge_weights(g.edge_src, g.indices, canonical_ids)
+    s_pad, d_pad, valid, per, w_pad = partition_edges(g, num_shards,
+                                                      edge_values=w)
+    n, n_pad = g.num_vertices, per * num_shards
+    espec = NamedSharding(mesh, P(axis, None))
+    s_sh = jax.device_put(s_pad, espec)
+    d_sh = jax.device_put(d_pad, espec)
+    v_sh = jax.device_put(valid, espec)
+    w_sh = jax.device_put(w_pad.astype(np.int32), espec)
+
+    def step(dist, src_e, dst_e, val_e, w_e):
+        full = jax.lax.all_gather(dist, axis, axis=1, tiled=True)
+        du = full[:, src_e[0]]                                # (S, e_local)
+        cand = jnp.where(val_e[0] & (du != _INF_I32),
+                         du + w_e[0], _INF_I32)
+        relaxed = jax.vmap(
+            lambda c: jax.ops.segment_min(c, dst_e[0], num_segments=per)
+        )(cand)
+        new = jnp.minimum(dist, relaxed)
+        # replicated convergence flag: psum makes it identical on every
+        # shard, as the P() out_spec requires
+        changed = jax.lax.psum((new != dist).any().astype(jnp.int32), axis)
+        return new, changed > 0
+
+    sharded_step = jax.jit(_shard_map(
+        step, mesh=mesh,
+        in_specs=(P(None, axis), P(axis, None), P(axis, None),
+                  P(axis, None), P(axis, None)),
+        out_specs=(P(None, axis), P()),
+    ))
+
+    def run(sources):
+        srcs = np.atleast_1d(np.asarray(sources, np.int64))
+        s = srcs.size
+        dist0 = np.full((s, n_pad), _INF_I32, np.int32)
+        dist0[np.arange(s), srcs] = 0
+        dist = _put_state(dist0, mesh, axis)
+        for _ in range(n):
+            dist, changed = sharded_step(dist, s_sh, d_sh, v_sh, w_sh)
+            if not bool(changed):
+                break
+        return dist[:, :n]
+
     return run

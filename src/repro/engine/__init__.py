@@ -9,6 +9,9 @@ the policy's per-scheme strengths (calibration.py), and the session
 re-decides — re-reordering in place — when realized traffic diverges
 from the registration hint or a reorder provably cannot amortize.
 """
+from .backends import (ExecutionBackend, GraphHandle, ShardedBackend,
+                       SingleDeviceBackend, bucket_dims,
+                       estimate_device_bytes)
 from .calibration import DEFAULT_PRIORS, SchemeStats, StrengthCalibrator
 from .executor import BatchedExecutor
 from .policy import PolicyDecision, PolicyRecord, ReorderPolicy
@@ -17,7 +20,9 @@ from .session import AmortizationLedger, EngineSession
 
 __all__ = [
     "AmortizationLedger", "BatchedExecutor", "DEFAULT_PRIORS",
-    "EngineSession", "GraphProbes", "GraphRegistry", "PolicyDecision",
-    "PolicyRecord", "ReorderPolicy", "SchemeStats", "StrengthCalibrator",
+    "EngineSession", "ExecutionBackend", "GraphHandle", "GraphProbes",
+    "GraphRegistry", "PolicyDecision", "PolicyRecord", "ReorderPolicy",
+    "SchemeStats", "ShardedBackend", "SingleDeviceBackend",
+    "StrengthCalibrator", "bucket_dims", "estimate_device_bytes",
     "probe_graph",
 ]

@@ -1,0 +1,351 @@
+"""Pluggable execution backends: where and in what shape a graph runs.
+
+The executor used to be a single code path — exact-shape compile cache on
+one device. Two scale gaps (ROADMAP "Engine") break that at serving
+volume:
+
+* **compile sharing** — XLA specializes on shapes, so a stream of graphs
+  with *distinct* (V, E) recompiles every kernel per graph even though
+  the programs are identical. `SingleDeviceBackend` pads CSR uploads to
+  geometric (V_bucket, E_bucket) shapes with masked sentinel edges
+  (graph_arrays.to_device ``pad_to``; kernels consult the masks), so all
+  graphs in a bucket share one compiled executable per kernel and results
+  on the real ``[:V]`` prefix stay exact.
+* **single-device memory** — a graph whose CSR working set exceeds the
+  per-device budget has no serving path. `ShardedBackend` routes queries
+  through `core.dist`'s edge-partitioned kernels (multi-source BFS/SSSP +
+  PageRank) across every visible device.
+
+Both present the same surface (`ExecutionBackend`): ``prepare`` turns a
+host graph into a `GraphHandle`, ``run`` executes one query batch against
+a handle. `engine.executor.BatchedExecutor` is the routing facade; the
+*choice* of backend is a policy decision (`ReorderPolicy` places a graph
+by comparing `estimate_device_bytes` against its device budget) recorded
+in the policy record and the amortization ledger. docs/backends.md has
+the full picture.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..algos import kernels as K
+from ..algos.graph_arrays import GraphArrays, to_device
+from ..core.csr import Graph
+
+# kernels taking a batch of sources -> (S, V) per-source rows
+MULTI_SOURCE = ("bfs", "sssp", "bc")
+# source-independent kernels -> (V,)
+GLOBAL = ("pr", "cc", "ccsv")
+
+# All entries are already jitted in algos.kernels; jax's own cache
+# specializes per CSR shape. The backend's key-level dict on top exists
+# to *attribute* compiles to serving traffic (hit/miss telemetry).
+_FNS = {
+    "bfs": K.bfs_multi,
+    "sssp": K.sssp_multi,
+    "bc": K.bc_multi,
+    "pr": K.pagerank,
+    "cc": K.cc_labelprop,
+    "ccsv": K.cc_shiloach_vishkin,
+}
+
+
+def build_kernel(kernel: str):
+    try:
+        return _FNS[kernel]
+    except KeyError:
+        raise ValueError(f"unknown kernel {kernel!r}; "
+                         f"have {MULTI_SOURCE + GLOBAL}") from None
+
+
+def source_bucket(n: int) -> int:
+    """Next power-of-two source-batch bucket (>= 1)."""
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def pad_sources(sources, kernel: str) -> tuple[np.ndarray, int]:
+    """Validate + pad a source batch to its power-of-two bucket.
+
+    Returns ``(padded_sources, real_count)``. Raises *before* any cache
+    or device work for an empty batch — a zero-width vmap launch would
+    still consult (and pollute) the compile-cache telemetry.
+    """
+    srcs = np.atleast_1d(np.asarray(sources, dtype=np.int32))
+    if srcs.size == 0:
+        raise ValueError(f"{kernel} needs at least one source")
+    pad = source_bucket(srcs.size)
+    padded = np.full(pad, srcs[0], np.int32)
+    padded[:srcs.size] = srcs
+    return padded, int(srcs.size)
+
+
+# ------------------------------------------------------------------ buckets
+def bucket_dims(num_vertices: int, num_edges: int, growth: float = 2.0,
+                v_floor: int = 256, e_floor: int = 1024) -> tuple[int, int]:
+    """Geometric (V_bucket, E_bucket) for compile sharing.
+
+    Buckets grow by ``growth`` from the floors, so a stream of arbitrary
+    graph sizes hits O(log V + log E) compiled shapes per kernel. When
+    edges need padding the vertex bucket is forced strictly above V so
+    sentinel self-loops land on a *padded* vertex — that keeps them out
+    of every real adjacency list and off the real in-CSR rows.
+    """
+    if growth <= 1.0:
+        raise ValueError(f"growth must be > 1, got {growth}")
+
+    def up(x: int, floor: int) -> int:
+        b = floor
+        while b < x:
+            b = int(math.ceil(b * growth))
+        return b
+
+    e_b = up(num_edges, e_floor)
+    v_min = num_vertices + 1 if e_b > num_edges else num_vertices
+    v_b = up(v_min, v_floor)
+    return v_b, e_b
+
+
+def estimate_device_bytes(num_vertices: int, num_edges: int) -> int:
+    """Device footprint of one `GraphArrays` upload (placement input).
+
+    int32 fields: 2x indptr (V+1), 5x edge-sized (indices, src, t_indices,
+    t_dst, weights), 2x vertex-sized degrees; plus 1-byte bool masks.
+    """
+    return (4 * (2 * (num_vertices + 1) + 5 * num_edges + 2 * num_vertices)
+            + num_vertices + num_edges)
+
+
+# ------------------------------------------------------------------- handle
+@dataclasses.dataclass
+class GraphHandle:
+    """What ``prepare`` returns and ``run`` consumes — one served graph.
+
+    ``num_vertices``/``num_edges`` are the *real* sizes; ``bucket`` is the
+    padded upload shape (equal to the real sizes when bucketing is off or
+    the graph already sits on a bucket boundary). ``arrays`` is the
+    single-device upload; sharded handles carry backend state in
+    ``shard_state`` instead.
+    """
+
+    backend: str
+    num_vertices: int
+    num_edges: int
+    bucket: tuple[int, int]
+    device_bytes: int
+    arrays: GraphArrays | None = None
+    shard_state: object | None = None
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """Uniform surface the executor routes through."""
+
+    name: str
+
+    def prepare(self, graph: Graph,
+                canonical_ids: np.ndarray | None = None) -> GraphHandle: ...
+
+    def run(self, handle: GraphHandle, kernel: str,
+            sources=None) -> jnp.ndarray: ...
+
+    def telemetry(self) -> dict: ...
+
+
+# ------------------------------------------------------------- single device
+class SingleDeviceBackend:
+    """Today's path plus shape bucketing: one device, shared compiles."""
+
+    name = "single"
+
+    def __init__(self, bucketing: bool = True, growth: float = 2.0,
+                 v_floor: int = 256, e_floor: int = 1024):
+        self.bucketing = bucketing
+        self.growth = growth
+        self.v_floor = v_floor
+        self.e_floor = e_floor
+        self._cache: dict[tuple, object] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.queries_run = 0
+        self.sources_run = 0
+        self.graphs_prepared = 0
+        self._bucket_counts: dict[tuple[int, int], int] = {}
+
+    # -------------------------------------------------------------- prepare
+    def prepare(self, graph: Graph,
+                canonical_ids: np.ndarray | None = None) -> GraphHandle:
+        n, e = graph.num_vertices, graph.num_edges
+        bucket = (bucket_dims(n, e, self.growth, self.v_floor, self.e_floor)
+                  if self.bucketing else (n, e))
+        arrays = to_device(graph, canonical_ids=canonical_ids,
+                           pad_to=bucket if bucket != (n, e) else None)
+        self.graphs_prepared += 1
+        self._bucket_counts[bucket] = self._bucket_counts.get(bucket, 0) + 1
+        return GraphHandle(self.name, n, e, bucket,
+                           estimate_device_bytes(*bucket), arrays=arrays)
+
+    # ------------------------------------------------------------------ run
+    def _compiled(self, kernel: str, ga: GraphArrays):
+        # validate the kernel name before touching any telemetry counter
+        fn = build_kernel(kernel)
+        # mask presence changes the pytree structure, so jax recompiles
+        # even at equal shapes — the telemetry key must not conflate them
+        key = (kernel, ga.num_vertices, ga.num_edges,
+               ga.vertex_valid is not None)
+        if key in self._cache:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+            self._cache[key] = fn
+        return fn
+
+    def run_arrays(self, ga: GraphArrays, kernel: str,
+                   sources=None) -> jnp.ndarray:
+        """Execute against raw device arrays (no real-prefix slicing)."""
+        build_kernel(kernel)  # unknown kernel: raise before anything counts
+        if kernel in GLOBAL:
+            fn = self._compiled(kernel, ga)
+            self.queries_run += 1
+            return jax.block_until_ready(fn(ga))
+        padded, real = pad_sources(sources, kernel)
+        fn = self._compiled(kernel, ga)
+        self.queries_run += 1
+        self.sources_run += real
+        out = fn(ga, jnp.asarray(padded))
+        return jax.block_until_ready(out)[:real]
+
+    def run(self, handle: GraphHandle, kernel: str,
+            sources=None) -> jnp.ndarray:
+        out = self.run_arrays(handle.arrays, kernel, sources)
+        # slice the bucket padding back off: results live on [:V]
+        return out[..., :handle.num_vertices]
+
+    # ------------------------------------------------------------ telemetry
+    def telemetry(self) -> dict:
+        return {
+            "compile_cache_hits": self.cache_hits,
+            "compile_cache_misses": self.cache_misses,
+            "cached_keys": sorted(str(k) for k in self._cache),
+            "queries_run": self.queries_run,
+            "sources_run": self.sources_run,
+            "bucketing": {
+                "enabled": self.bucketing,
+                "graphs_prepared": self.graphs_prepared,
+                "distinct_buckets": len(self._bucket_counts),
+                "bucket_counts": {str(k): v
+                                  for k, v in sorted(self._bucket_counts.items())},
+            },
+        }
+
+
+# ----------------------------------------------------------------- sharded
+class _ShardState:
+    """Per-graph device state for `ShardedBackend` (lazy kernel factories)."""
+
+    def __init__(self, graph: Graph, mesh, axis: str,
+                 canonical_ids: np.ndarray | None):
+        self.graph = graph
+        self.mesh = mesh
+        self.axis = axis
+        self.canonical_ids = canonical_ids
+        self._runners: dict[str, object] = {}
+
+    def runner(self, kernel: str):
+        fn = self._runners.get(kernel)
+        if fn is None:
+            from ..core import dist
+            if kernel == "bfs":
+                fn = dist.make_distributed_bfs(self.graph, self.mesh,
+                                               self.axis)
+            elif kernel == "sssp":
+                fn = dist.make_distributed_sssp(
+                    self.graph, self.mesh, self.axis,
+                    canonical_ids=self.canonical_ids)
+            elif kernel == "pr":
+                fn, _ = dist.make_distributed_pagerank(self.graph, self.mesh,
+                                                       self.axis)
+            else:
+                raise NotImplementedError(
+                    f"ShardedBackend serves {SHARDED_KERNELS}, not "
+                    f"{kernel!r}; register under the single-device budget "
+                    f"or extend core/dist.py")
+            self._runners[kernel] = fn
+        return fn
+
+
+SHARDED_KERNELS = ("bfs", "sssp", "pr")
+
+
+class ShardedBackend:
+    """Serve graphs beyond one device through core/dist edge partitions.
+
+    Edges are 1-D partitioned by destination range over ``mesh[axis]``
+    (every visible device by default); vertex property state lives sharded
+    and each traversal step all-gathers it — see core/dist.py for why
+    reordering concentrates the *useful* payload of that collective.
+    """
+
+    name = "sharded"
+
+    def __init__(self, num_shards: int | None = None, axis: str = "data",
+                 mesh=None):
+        if mesh is None:
+            n = num_shards or jax.device_count()
+            mesh = jax.make_mesh((n,), (axis,))
+        self.mesh = mesh
+        self.axis = axis
+        self.num_shards = mesh.shape[axis]
+        self.queries_run = 0
+        self.sources_run = 0
+        self.graphs_prepared = 0
+
+    def prepare(self, graph: Graph,
+                canonical_ids: np.ndarray | None = None) -> GraphHandle:
+        n, e = graph.num_vertices, graph.num_edges
+        state = _ShardState(graph, self.mesh, self.axis, canonical_ids)
+        self.graphs_prepared += 1
+        return GraphHandle(self.name, n, e, (n, e),
+                           self._per_device_bytes(graph),
+                           shard_state=state)
+
+    def _per_device_bytes(self, graph: Graph) -> int:
+        """Resident graph bytes per device, from the *actual* partition.
+
+        `partition_edges` splits by dst range and pads every shard to the
+        fullest shard's edge count, so on skewed graphs the per-device
+        footprint is set by the hub-heaviest range — the true histogram
+        is O(E) on the host and cheap next to the upload. Counts the
+        edge arrays (src, dst, valid, weights) and one int32 vertex
+        property slice; per-query (S × per) state is not included.
+        """
+        per = -(-graph.num_vertices // self.num_shards)
+        counts = np.bincount(np.asarray(graph.indices) // per,
+                             minlength=self.num_shards)
+        emax = int(counts.max()) if len(counts) else 0
+        return emax * (4 + 4 + 1 + 4) + per * 4
+
+    def run(self, handle: GraphHandle, kernel: str,
+            sources=None) -> jnp.ndarray:
+        runner = handle.shard_state.runner(kernel)
+        self.queries_run += 1
+        if kernel in GLOBAL:
+            return jax.block_until_ready(runner())[:handle.num_vertices]
+        padded, real = pad_sources(sources, kernel)
+        self.sources_run += real
+        out = runner(jnp.asarray(padded))
+        return jax.block_until_ready(out)[:real, :handle.num_vertices]
+
+    def telemetry(self) -> dict:
+        return {
+            "num_shards": self.num_shards,
+            "graphs_prepared": self.graphs_prepared,
+            "queries_run": self.queries_run,
+            "sources_run": self.sources_run,
+        }

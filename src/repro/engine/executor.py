@@ -1,110 +1,121 @@
-"""Batched query executor: compile-cached, vmapped multi-source kernels.
+"""Batched query executor: the routing facade over execution backends.
 
 This is the serving-side answer to the paper's framing (section 4: the
 traversal kernels whose cache behaviour reordering improves): the same
 jitted kernels the benchmarks time, run behind caches so a query stream
-pays compile and launch costs once, not per query. Two amortizations
-happen here:
+pays compile and launch costs once, not per query. The mechanics live in
+the backends (backends.py):
 
-* **compile cache** — jitted kernel callables are cached on
-  ``(kernel, num_vertices, num_edges)``; any graph with the same CSR shape
-  reuses the compiled executable (XLA specializes on shapes, not
-  contents). Telemetry counts hits/misses so serving cost is attributable.
+* **compile sharing** — `SingleDeviceBackend` caches jitted callables per
+  ``(kernel, V_bucket, E_bucket)`` and pads CSR uploads to geometric
+  shape buckets, so graphs of *different* sizes share compiled
+  executables, not just exact (V, E) matches. Telemetry counts
+  hits/misses so serving cost is attributable.
 * **source batching** — multi-source queries run as one ``vmap``-batched
   device launch (`algos.kernels.bfs_multi`/`sssp_multi`/`bc_multi`)
   instead of a Python loop. Batches are padded to power-of-two buckets so
   a stream of ragged batch sizes hits a handful of compiled shapes.
+* **sharding** — `ShardedBackend` routes queries through `core.dist`
+  edge-partitioned kernels when a graph exceeds the per-device budget
+  (the placement decision is the policy's, see policy.py).
+
+`BatchedExecutor.run` accepts either a `GraphHandle` from ``prepare``
+(routed to the handle's backend) or raw `GraphArrays` (legacy
+single-device path, exact shapes — what PR 1 callers and the benchmarks'
+reference timings use).
 """
 from __future__ import annotations
 
-import numpy as np
-
-import jax
 import jax.numpy as jnp
 
-from ..algos import kernels as K
 from ..algos.graph_arrays import GraphArrays
+from ..core.csr import Graph
+from .backends import (GLOBAL, MULTI_SOURCE, ExecutionBackend, GraphHandle,
+                       ShardedBackend, SingleDeviceBackend, build_kernel,
+                       source_bucket)
 
-# kernels taking a batch of sources -> (S, V) per-source rows
-MULTI_SOURCE = ("bfs", "sssp", "bc")
-# source-independent kernels -> (V,)
-GLOBAL = ("pr", "cc", "ccsv")
-
-
-def _bucket(n: int) -> int:
-    """Next power-of-two batch bucket (>= 1)."""
-    return 1 << max(0, (n - 1).bit_length())
-
-
-# All entries are already jitted in algos.kernels; jax's own cache
-# specializes per CSR shape. The executor's key-level dict on top exists
-# to *attribute* compiles to serving traffic (hit/miss telemetry).
-_FNS = {
-    "bfs": K.bfs_multi,
-    "sssp": K.sssp_multi,
-    "bc": K.bc_multi,
-    "pr": K.pagerank,
-    "cc": K.cc_labelprop,
-    "ccsv": K.cc_shiloach_vishkin,
-}
-
-
-def _build(kernel: str):
-    try:
-        return _FNS[kernel]
-    except KeyError:
-        raise ValueError(f"unknown kernel {kernel!r}; "
-                         f"have {MULTI_SOURCE + GLOBAL}") from None
+# Backwards-compatible aliases: PR 1 exposed these names here.
+_build = build_kernel
+_bucket = source_bucket
 
 
 class BatchedExecutor:
-    """Runs kernels against device graph arrays through a compile cache."""
+    """Runs kernels against prepared graph handles through their backend."""
 
-    def __init__(self):
-        self._cache: dict[tuple, object] = {}
-        self.cache_hits = 0
-        self.cache_misses = 0
-        self.queries_run = 0
-        self.sources_run = 0
+    def __init__(self, single: SingleDeviceBackend | None = None,
+                 num_shards: int | None = None, bucketing: bool = True):
+        self.single = single or SingleDeviceBackend(bucketing=bucketing)
+        self._num_shards = num_shards
+        self._sharded: ShardedBackend | None = None
 
-    def _compiled(self, kernel: str, ga: GraphArrays):
-        key = (kernel, ga.num_vertices, ga.num_edges)
-        fn = self._cache.get(key)
-        if fn is None:
-            self.cache_misses += 1
-            fn = self._cache[key] = _build(kernel)
-        else:
-            self.cache_hits += 1
-        return fn
+    @property
+    def sharded(self) -> ShardedBackend:
+        """Lazy: building a mesh is pointless until a graph needs one."""
+        if self._sharded is None:
+            self._sharded = ShardedBackend(num_shards=self._num_shards)
+        return self._sharded
 
-    def run(self, ga: GraphArrays, kernel: str,
-            sources=None) -> jnp.ndarray:
+    def backend(self, name: str) -> ExecutionBackend:
+        if name == "single":
+            return self.single
+        if name == "sharded":
+            return self.sharded
+        raise ValueError(f"unknown backend {name!r}; have single, sharded")
+
+    # -------------------------------------------------------------- prepare
+    def prepare(self, graph: Graph, backend: str = "single",
+                canonical_ids=None) -> GraphHandle:
+        """Upload one graph through the named backend; returns its handle."""
+        return self.backend(backend).prepare(graph,
+                                             canonical_ids=canonical_ids)
+
+    # ------------------------------------------------------------------ run
+    def run(self, target, kernel: str, sources=None) -> jnp.ndarray:
         """Execute one query batch.
 
         Multi-source kernels return per-source rows ``(S, V)``; global
         kernels ignore ``sources`` and return ``(V,)``. Results are
-        blocked on (serving latency = device latency).
+        blocked on (serving latency = device latency) and sliced to the
+        graph's real vertex count.
         """
-        fn = self._compiled(kernel, ga)
-        self.queries_run += 1
-        if kernel in GLOBAL:
-            out = fn(ga)
-            return jax.block_until_ready(out)
-        srcs = np.atleast_1d(np.asarray(sources, dtype=np.int32))
-        if srcs.size == 0:
-            raise ValueError(f"{kernel} needs at least one source")
-        self.sources_run += int(srcs.size)
-        pad = _bucket(srcs.size)
-        padded = np.full(pad, srcs[0], np.int32)
-        padded[:srcs.size] = srcs
-        out = fn(ga, jnp.asarray(padded))
-        return jax.block_until_ready(out)[:srcs.size]
+        if isinstance(target, GraphHandle):
+            return self.backend(target.backend).run(target, kernel, sources)
+        if isinstance(target, GraphArrays):
+            return self.single.run_arrays(target, kernel, sources)
+        raise TypeError(f"expected GraphHandle or GraphArrays, "
+                        f"got {type(target).__name__}")
+
+    # ---------------------------------------------------- legacy telemetry
+    @property
+    def cache_hits(self) -> int:
+        return self.single.cache_hits
+
+    @property
+    def cache_misses(self) -> int:
+        return self.single.cache_misses
+
+    @property
+    def queries_run(self) -> int:
+        sharded = self._sharded.queries_run if self._sharded else 0
+        return self.single.queries_run + sharded
+
+    @property
+    def sources_run(self) -> int:
+        sharded = self._sharded.sources_run if self._sharded else 0
+        return self.single.sources_run + sharded
 
     def telemetry(self) -> dict:
+        # legacy top-level keys + cross-backend totals; the detail
+        # (cached keys, bucketing stats, shard counts) lives per backend
         return {
             "compile_cache_hits": self.cache_hits,
             "compile_cache_misses": self.cache_misses,
-            "cached_keys": sorted(str(k) for k in self._cache),
             "queries_run": self.queries_run,
             "sources_run": self.sources_run,
+            "single": self.single.telemetry(),
+            "sharded": self._sharded.telemetry() if self._sharded else None,
         }
+
+
+__all__ = ["GLOBAL", "MULTI_SOURCE", "BatchedExecutor", "GraphHandle",
+           "ShardedBackend", "SingleDeviceBackend"]

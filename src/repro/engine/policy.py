@@ -30,6 +30,7 @@ from __future__ import annotations
 import dataclasses
 
 from ..core.baselines import reordering_registry
+from .backends import bucket_dims, estimate_device_bytes
 from .calibration import DEFAULT_PRIORS, StrengthCalibrator
 from .registry import GraphProbes
 
@@ -45,6 +46,7 @@ class PolicyDecision:
     reason: str              # human-readable rule that fired
     predicted_gain: float    # predicted fractional miss-rate reduction
     skew: float = 0.0        # probe composite the prediction was based on
+    backend: str = "single"  # placement: engine.backends name
 
 
 @dataclasses.dataclass
@@ -71,6 +73,7 @@ class PolicyRecord:
         return {
             "graph_id": self.graph_id,
             "scheme": self.decision.scheme,
+            "backend": self.decision.backend,
             "kwargs": self.decision.kwargs,
             "reason": self.decision.reason,
             "skew": self.decision.skew,
@@ -89,7 +92,8 @@ class ReorderPolicy:
                  min_gini: float = 0.25, dbg_gini: float = 0.45,
                  calibrator: StrengthCalibrator | None = None,
                  min_calibration_samples: int = 5,
-                 override_margin: float = 0.05):
+                 override_margin: float = 0.05,
+                 device_budget_bytes: int | None = None):
         self.min_queries = min_queries
         self.high_volume = high_volume
         self.min_gini = min_gini
@@ -97,6 +101,9 @@ class ReorderPolicy:
         self.calibrator = calibrator or StrengthCalibrator()
         self.min_calibration_samples = min_calibration_samples
         self.override_margin = override_margin
+        # None = everything fits one device; a byte budget turns placement
+        # on and routes oversized graphs to the sharded backend
+        self.device_budget_bytes = device_budget_bytes
         self.history: list[PolicyRecord] = []
 
     # ------------------------------------------------------------- decide
@@ -114,6 +121,30 @@ class ReorderPolicy:
         if scheme == "lorder":
             return {"kappa": max(1, (probes.diameter + 1) // 2)}
         return {}
+
+    def _placement(self, probes: GraphProbes) -> tuple[str, str | None]:
+        """Pick the execution backend from the CSR footprint vs budget.
+
+        Placement changes the amortization math, not just the launch
+        path: a sharded traversal pays an all-gather per step, so the
+        session discounts booked reorder savings on sharded graphs
+        (`AmortizationLedger.gain_discount`).
+        """
+        if self.device_budget_bytes is None:
+            return "single", None
+        # what the single-device backend would actually upload: the graph
+        # padded to its geometric bucket (default bucketing params), not
+        # the raw (V, E) footprint — a graph just under budget raw can be
+        # nearly growth x over it once padded
+        need = estimate_device_bytes(
+            *bucket_dims(probes.num_vertices, probes.num_edges))
+        if need > self.device_budget_bytes:
+            note = (f"placement: CSR working set ~{need / 1e6:.1f} MB "
+                    f"exceeds device budget "
+                    f"{self.device_budget_bytes / 1e6:.1f} MB — serving "
+                    f"sharded across devices")
+            return "sharded", note
+        return "single", None
 
     def _calibrated_override(self, default: str, candidates: list[str],
                              probes: GraphProbes) -> tuple[str, str | None]:
@@ -179,9 +210,12 @@ class ReorderPolicy:
                                                      probes)
             if note:
                 reason = f"{reason}; {note}"
+        backend, placement_note = self._placement(probes)
+        if placement_note:
+            reason = f"{reason}; {placement_note}"
         return PolicyDecision(scheme, self._scheme_kwargs(scheme, probes),
                               reason, self._predict_gain(probes, scheme),
-                              self._skew(probes))
+                              self._skew(probes), backend)
 
     # -------------------------------------------------------------- apply
     def reorder_fn(self, decision: PolicyDecision):

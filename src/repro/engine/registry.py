@@ -80,7 +80,10 @@ class GraphEntry:
     perm: np.ndarray | None = None    # perm[old_id] = served_id
     inv_perm: np.ndarray | None = None
     served: Graph | None = None       # reordered layout actually executed
-    arrays: object | None = None      # GraphArrays of `served`
+    arrays: object | None = None      # GraphArrays of `served` (single only)
+    handle: object | None = None      # engine.backends.GraphHandle
+    backend: str = "single"           # placement the policy chose
+    bucket_shape: tuple | None = None  # padded (V_b, E_b) upload shape
     reorder_seconds: float = 0.0
     decision: object | None = None    # engine.policy.PolicyDecision
     ledger: object | None = None      # engine.session.AmortizationLedger

@@ -1,10 +1,14 @@
 """Session front-end: register graphs, submit query batches, read telemetry.
 
 ``EngineSession`` ties the subsystem together: registration probes the
-graph (registry), picks and applies a reordering (policy), uploads the
-served layout, and opens an amortization ledger; ``submit`` translates
-query sources into the served id space, runs the batched executor, and
-translates results back — callers never see the internal layout.
+graph (registry), picks and applies a reordering *and a placement*
+(policy: single-device bucketed upload, or sharded across devices when
+the CSR footprint exceeds the device budget — see backends.py), uploads
+the served layout through the chosen backend, and opens an amortization
+ledger; ``submit`` translates query sources into the served id space,
+runs the batched executor against the graph's backend handle, and
+translates results back — callers never see the internal layout or the
+placement.
 
 A registration-time decision is **not final**. The session tracks
 realized query volume per graph, and when it diverges from the
@@ -29,7 +33,6 @@ import time
 
 import numpy as np
 
-from ..algos.graph_arrays import to_device
 from ..cache.sim import estimate_miss_rate, scaled_config
 from ..core.csr import Graph
 from .executor import GLOBAL, MULTI_SOURCE, BatchedExecutor
@@ -39,7 +42,16 @@ from .registry import GraphEntry, GraphRegistry
 
 @dataclasses.dataclass
 class AmortizationLedger:
-    """Tracks whether one reorder has paid for itself yet."""
+    """Tracks whether one reorder has paid for itself yet.
+
+    Placement changes the break-even math: on the sharded backend each
+    traversal step pays an all-gather whose cost locality does not
+    remove, so the miss-rate gain only applies to the compute fraction of
+    a launch. ``gain_discount`` (< 1 for sharded graphs) scales the gain
+    before savings are booked — sharded reorders take proportionally more
+    queries to amortize, which is exactly what the re-decision trigger
+    should see.
+    """
 
     reorder_seconds: float
     realized_gain: float          # fractional miss-rate reduction
@@ -48,6 +60,8 @@ class AmortizationLedger:
     query_seconds: float = 0.0
     estimated_saved_seconds: float = 0.0
     estimated_lost_seconds: float = 0.0
+    backend: str = "single"
+    gain_discount: float = 1.0    # fraction of the gain that reaches wall
 
     def record_query(self, num_sources: int, wall_seconds: float) -> None:
         self.queries_served += 1
@@ -55,7 +69,7 @@ class AmortizationLedger:
         self.query_seconds += wall_seconds
         # time this query would have cost on the original layout, assuming
         # wall ∝ property misses: t_before = t_after / (1 - gain)
-        gain = min(self.realized_gain, 0.95)
+        gain = min(self.realized_gain * self.gain_discount, 0.95)
         if gain > 0:
             self.estimated_saved_seconds += wall_seconds * gain / (1 - gain)
         elif gain < 0:
@@ -96,14 +110,21 @@ class EngineSession:
                  cache_cfg=None,
                  redecide_factor: float = 4.0,
                  redecide_min_queries: int = 8,
-                 max_redecisions: int = 3):
-        self.policy = policy or ReorderPolicy()
+                 max_redecisions: int = 3,
+                 device_budget_bytes: int | None = None,
+                 num_shards: int | None = None,
+                 sharded_gain_discount: float = 0.5):
+        # an explicitly supplied policy carries its own budget; the
+        # session-level knob only configures the default policy
+        self.policy = policy or ReorderPolicy(
+            device_budget_bytes=device_budget_bytes)
         self.registry = registry or GraphRegistry()
-        self.executor = executor or BatchedExecutor()
+        self.executor = executor or BatchedExecutor(num_shards=num_shards)
         self.cache_cfg = cache_cfg  # None = scaled_config per graph
         self.redecide_factor = redecide_factor
         self.redecide_min_queries = redecide_min_queries
         self.max_redecisions = max_redecisions
+        self.sharded_gain_discount = sharded_gain_discount
         self.redecision_log: list[dict] = []
 
     # ----------------------------------------------------------- register
@@ -140,12 +161,21 @@ class EngineSession:
             after = estimate_miss_rate(entry.served, cfg)
         # canonical_ids = inverse perm keeps SSSP edge weights identical to
         # the original layout, so served results match original-layout runs
-        entry.arrays = to_device(entry.served, canonical_ids=inv)
+        entry.handle = self.executor.prepare(entry.served,
+                                             backend=decision.backend,
+                                             canonical_ids=inv)
+        entry.backend = decision.backend
+        entry.bucket_shape = entry.handle.bucket
+        entry.arrays = entry.handle.arrays  # None when served sharded
 
         rec = self.policy.record(entry.graph_id, decision, before, after,
                                  entry.reorder_seconds)
+        discount = (self.sharded_gain_discount
+                    if decision.backend == "sharded" else 1.0)
         entry.ledger = AmortizationLedger(entry.reorder_seconds,
-                                          rec.realized_gain)
+                                          rec.realized_gain,
+                                          backend=decision.backend,
+                                          gain_discount=discount)
 
     # -------------------------------------------------------- re-decision
     def _maybe_redecide(self, entry: GraphEntry) -> dict | None:
@@ -182,7 +212,7 @@ class EngineSession:
                  f"{entry.ledger.realized_gain:.3f} <= 0 after "
                  f"{entry.ledger.queries_served} queries — it can never "
                  f"amortize, serving the original layout"),
-                0.0, new.skew)
+                0.0, new.skew, new.backend)
         if (new.scheme, new.kwargs) == (old.scheme, old.kwargs):
             # same choice at the new volume: refresh the hint so the
             # divergence trigger re-arms at redecide_factor x observed
@@ -220,7 +250,7 @@ class EngineSession:
             num_sources = int(srcs.size)
             sources = entry.perm[srcs].astype(np.int32)
         t0 = time.perf_counter()
-        out = np.asarray(self.executor.run(entry.arrays, kernel, sources))
+        out = np.asarray(self.executor.run(entry.handle, kernel, sources))
         wall = time.perf_counter() - t0
         entry.ledger.record_query(num_sources, wall)
         self.registry.note_queries(graph_id)
@@ -247,6 +277,10 @@ class EngineSession:
             "graphs": {
                 gid: {
                     "scheme": e.decision.scheme if e.decision else None,
+                    "backend": e.backend,
+                    "bucket_shape": e.bucket_shape,
+                    "device_bytes": (e.handle.device_bytes
+                                     if e.handle else None),
                     "probes": dataclasses.asdict(e.probes),
                     "reorder_seconds": e.reorder_seconds,
                     "expected_queries": e.expected_queries,

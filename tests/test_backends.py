@@ -1,0 +1,255 @@
+"""Execution backends: bucketing correctness, placement, sharded serving.
+
+The genuinely distributed checks (4 shards) run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` — the flag must be
+set before jax initializes its backends (CI also runs this whole file
+under a 4-device step).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.algos import kernels as K
+from repro.algos.graph_arrays import to_device
+from repro.core.generators import powerlaw_community
+from repro.engine import (BatchedExecutor, EngineSession, GraphHandle,
+                          ReorderPolicy, ShardedBackend, SingleDeviceBackend,
+                          bucket_dims, estimate_device_bytes, probe_graph)
+
+
+# ---------------------------------------------------------------- buckets
+def test_bucket_dims_geometric_and_sentinel_room():
+    v, e = bucket_dims(1000, 9000)
+    assert v >= 1001 and e >= 9000          # room for sentinel self-loops
+    assert bucket_dims(1000, 9000) == bucket_dims(900, 8500)  # shared bucket
+    # no edge padding needed -> vertex bucket may equal V exactly
+    assert bucket_dims(256, 1024) == (256, 1024)
+    # floors apply to tiny graphs
+    assert bucket_dims(8, 12) == (256, 1024)
+    with pytest.raises(ValueError):
+        bucket_dims(10, 10, growth=1.0)
+
+
+def test_estimate_device_bytes_monotone():
+    assert estimate_device_bytes(100, 1000) < estimate_device_bytes(100, 2000)
+    assert estimate_device_bytes(100, 1000) < estimate_device_bytes(200, 1000)
+
+
+# ----------------------------------------------------- padded CSR parity
+def _parity_padded_vs_exact(g, srcs):
+    bucketed = SingleDeviceBackend()
+    handle = bucketed.prepare(g)
+    assert handle.bucket[0] > g.num_vertices or handle.bucket == (
+        g.num_vertices, g.num_edges)
+    ga = to_device(g)
+    for kernel in ("bfs", "sssp"):
+        got = np.asarray(bucketed.run(handle, kernel, srcs))
+        want = np.asarray(SingleDeviceBackend(bucketing=False).run_arrays(
+            ga, kernel, srcs))
+        assert got.shape == (len(srcs), g.num_vertices)
+        np.testing.assert_array_equal(got, want)  # ints: bit-identical
+    np.testing.assert_allclose(
+        np.asarray(bucketed.run(handle, "pr")),
+        np.asarray(K.pagerank(ga)), rtol=1e-5, atol=1e-9)
+    for kernel in ("cc", "ccsv"):
+        np.testing.assert_array_equal(
+            np.asarray(bucketed.run(handle, kernel)),
+            np.asarray(SingleDeviceBackend(bucketing=False).run_arrays(
+                ga, kernel)))
+    np.testing.assert_allclose(
+        np.asarray(bucketed.run(handle, "bc", srcs)),
+        np.asarray(K.bc_multi(ga, jnp.asarray(srcs, jnp.int32))),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_bucket_padding_exact_all_kernels(plc_graph):
+    _parity_padded_vs_exact(plc_graph, np.array([0, 7, 42, 1999], np.int32))
+
+
+def test_bucket_padding_exact_tiny(tiny_graph):
+    # 8 vertices pad all the way up to the (256, 1024) floor bucket
+    _parity_padded_vs_exact(tiny_graph, np.array([0, 3], np.int32))
+
+
+def test_bucket_padding_property_random_powerlaw():
+    """Satellite: bucketed BFS/SSSP/PR == unpadded on random power-law
+    graphs (hypothesis-driven when available)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(n=st.integers(min_value=60, max_value=900),
+           avg_degree=st.floats(min_value=2.0, max_value=12.0),
+           seed=st.integers(min_value=0, max_value=2**16))
+    def check(n, avg_degree, seed):
+        g = powerlaw_community(n, avg_degree=avg_degree, seed=seed)
+        rng = np.random.default_rng(seed)
+        srcs = rng.integers(0, n, size=3).astype(np.int32)
+        _parity_padded_vs_exact(g, srcs)
+
+    check()
+
+
+def test_compile_sharing_across_distinct_shapes():
+    """Graphs of different (V, E) in one bucket share one compile key."""
+    backend = SingleDeviceBackend()
+    sizes = (300, 330, 360, 390)
+    graphs = [powerlaw_community(n, avg_degree=4.0, seed=n) for n in sizes]
+    assert len({(g.num_vertices, g.num_edges) for g in graphs}) == len(sizes)
+    outs = []
+    for g in graphs:
+        h = backend.prepare(g)
+        outs.append(backend.run(h, "bfs", np.array([0], np.int32)))
+    exact = SingleDeviceBackend(bucketing=False)
+    for g in graphs:
+        exact.run(exact.prepare(g), "bfs", np.array([0], np.int32))
+    assert exact.cache_misses == len(sizes)
+    assert backend.cache_misses < exact.cache_misses
+    assert backend.cache_misses * 2 <= exact.cache_misses
+
+
+# ----------------------------------------------- executor facade + guards
+def test_empty_sources_guard_before_cache_telemetry(plc_graph):
+    """Satellite: an empty batch (or unknown kernel) must not touch the
+    compile-cache counters — formerly it booked a miss before raising."""
+    ex = BatchedExecutor()
+    ga = to_device(plc_graph)
+    with pytest.raises(ValueError):
+        ex.run(ga, "bfs", [])
+    with pytest.raises(ValueError):
+        ex.run(ga, "bfs", np.empty(0, np.int32))
+    with pytest.raises(ValueError):
+        ex.run(ga, "nope", [0])
+    assert (ex.cache_hits, ex.cache_misses) == (0, 0)
+    assert ex.queries_run == 0 and ex.sources_run == 0
+
+
+def test_executor_rejects_unknown_target_and_backend(plc_graph):
+    ex = BatchedExecutor()
+    with pytest.raises(TypeError):
+        ex.run(plc_graph, "bfs", [0])  # host Graph is not a served target
+    with pytest.raises(ValueError):
+        ex.backend("tpu-pod")
+
+
+def test_executor_prepare_routes_and_merges_telemetry(plc_graph):
+    ex = BatchedExecutor()
+    h = ex.prepare(plc_graph)
+    assert isinstance(h, GraphHandle) and h.backend == "single"
+    ex.run(h, "bfs", [0, 1])
+    t = ex.telemetry()
+    assert t["compile_cache_misses"] == 1
+    assert t["single"]["bucketing"]["graphs_prepared"] == 1
+    assert t["sharded"] is None  # lazy: never built
+
+
+# -------------------------------------------------------------- placement
+def test_policy_places_by_device_budget(plc_graph):
+    probes = probe_graph(plc_graph)
+    need = estimate_device_bytes(probes.num_vertices, probes.num_edges)
+    fits = ReorderPolicy(device_budget_bytes=need * 10).decide(probes, 256)
+    assert fits.backend == "single"
+    over = ReorderPolicy(device_budget_bytes=need // 4).decide(probes, 256)
+    assert over.backend == "sharded" and "placement" in over.reason
+    default = ReorderPolicy().decide(probes, 256)
+    assert default.backend == "single"
+
+
+def test_session_sharded_single_shard_parity(plc_graph):
+    """In-process (1 host device = 1 shard): sharded serving through
+    ``EngineSession.submit`` matches single-device kernels exactly."""
+    session = EngineSession(device_budget_bytes=1024)
+    gid = session.register(plc_graph, graph_id="over-budget",
+                           expected_queries=256)
+    entry = session.registry.get(gid)
+    assert entry.backend == "sharded"
+    assert entry.ledger.backend == "sharded"
+    assert entry.ledger.gain_discount == session.sharded_gain_discount < 1.0
+    ga = to_device(plc_graph)
+    srcs = np.array([5, 321, 1500])
+    depth = session.submit(gid, "bfs", srcs)
+    dist = session.submit(gid, "sssp", srcs)
+    for i, s in enumerate(srcs):
+        np.testing.assert_array_equal(depth[i],
+                                      np.asarray(K.bfs(ga, jnp.int32(s))))
+        np.testing.assert_array_equal(dist[i],
+                                      np.asarray(K.sssp(ga, jnp.int32(s))))
+    np.testing.assert_allclose(session.submit(gid, "pr"),
+                               np.asarray(K.pagerank(ga)),
+                               rtol=1e-4, atol=1e-8)
+    with pytest.raises(NotImplementedError):
+        session.submit(gid, "bc", srcs)
+    t = session.telemetry()
+    assert t["graphs"][gid]["backend"] == "sharded"
+    assert t["executor"]["sharded"]["queries_run"] == 3  # bc raised, uncounted
+
+
+def test_sharded_backend_four_devices_session_submit():
+    """Sharded serving across 4 forced host devices, end-to-end through
+    ``EngineSession.submit`` (bfs + sssp exact, pr allclose)."""
+    prog = textwrap.dedent("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        assert jax.device_count() == 4, jax.devices()
+        from repro.algos import kernels as K
+        from repro.algos.graph_arrays import to_device
+        from repro.core.generators import powerlaw_community
+        from repro.engine import EngineSession
+
+        g = powerlaw_community(2000, avg_degree=8.0, seed=3)
+        session = EngineSession(device_budget_bytes=50_000)
+        gid = session.register(g, graph_id="big", expected_queries=256)
+        entry = session.registry.get(gid)
+        assert entry.backend == "sharded", entry.backend
+        assert session.executor.sharded.num_shards == 4
+        srcs = np.array([3, 99, 500, 1500])
+        ga = to_device(g)
+        depth = session.submit(gid, "bfs", srcs)
+        dist = session.submit(gid, "sssp", srcs)
+        for i, s in enumerate(srcs):
+            np.testing.assert_array_equal(
+                depth[i], np.asarray(K.bfs(ga, jnp.int32(s))))
+            np.testing.assert_array_equal(
+                dist[i], np.asarray(K.sssp(ga, jnp.int32(s))))
+        np.testing.assert_allclose(
+            session.submit(gid, "pr"), np.asarray(K.pagerank(ga)),
+            rtol=1e-4, atol=1e-7)
+        print("SHARDED_PARITY_OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), env.get("PYTHONPATH", "")]).rstrip(
+        os.pathsep)
+    res = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"stdout={res.stdout}\nstderr={res.stderr}"
+    assert "SHARDED_PARITY_OK" in res.stdout
+
+
+def test_sharded_backend_unsupported_kernel_message(plc_graph):
+    backend = ShardedBackend(num_shards=1)
+    handle = backend.prepare(plc_graph)
+    with pytest.raises(NotImplementedError, match="bfs"):
+        backend.run(handle, "cc")
+
+
+# ------------------------------------------------------ benchmark driver
+def test_run_py_parse_only_accepts_lists():
+    from benchmarks.run import HARNESSES, parse_only
+    assert parse_only(None) == list(HARNESSES)
+    assert parse_only("engine") == ["engine"]
+    assert parse_only("engine,reorder_time") == ["engine", "reorder_time"]
+    assert parse_only(" engine , skew ") == ["engine", "skew"]
+    with pytest.raises(SystemExit):
+        parse_only("engine,nope")
