@@ -1,13 +1,40 @@
-"""Shared benchmark plumbing: dataset suite, schemes, timing, result io."""
+"""Shared benchmark plumbing: dataset suite, schemes, timing, result io,
+and the forced-4-device subprocess runner (also used by tests/conftest)."""
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import subprocess
+import sys
 import time
 
 import numpy as np
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def run_forced_four_devices(argv: list[str], timeout: int = 600):
+    """Run ``python *argv`` from the repo root with 4 forced host devices.
+
+    Genuinely distributed runs need
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` set *before*
+    jax initializes its backends, hence a fresh subprocess (the flag is
+    appended only if absent, so nesting under CI's 4-device step works).
+    This is the single copy of that recipe — tests/conftest.py re-exports
+    it for the distributed test legs.
+    """
+    env = dict(os.environ)
+    flag = "--xla_force_host_platform_device_count=4"
+    if flag not in env.get("XLA_FLAGS", ""):
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flag).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    root = str(pathlib.Path(__file__).resolve().parent.parent)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), env.get("PYTHONPATH", "")]).rstrip(
+        os.pathsep)
+    return subprocess.run([sys.executable, *argv], env=env, cwd=root,
+                          capture_output=True, text=True, timeout=timeout)
 
 
 def save_json(name: str, obj) -> pathlib.Path:

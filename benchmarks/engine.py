@@ -1,6 +1,6 @@
 """Engine harness — policy decisions, amortization, and the closed loop.
 
-Five phases:
+Six phases:
 
 1. **Decisions + amortization** — for each dataset: register with the
    serving engine (policy decides a scheme from probes + volume hint),
@@ -19,25 +19,28 @@ Five phases:
 4. **Shape bucketing** — serve a stream of distinct-shape graphs through
    an exact-shape executor and a bucketed one; report the compile-miss
    reduction and check bucketed results are bit-identical.
-5. **Sharded serving** — in a subprocess with 4 forced host devices,
-   register a graph whose CSR footprint exceeds the device budget and
-   serve BFS/SSSP/PR through ``EngineSession.submit``; report per-device
-   memory and wall-clock per kernel.
+5. **Sharded serving parity** — in a subprocess with 4 forced host
+   devices, register a graph whose CSR footprint exceeds the device
+   budget and serve **all six kernels** through ``EngineSession.submit``;
+   report per-device memory, wall-clock per kernel, and parity against a
+   single-device session serving the same graph (bit-identical for
+   bfs/sssp/cc/ccsv, allclose for pr/bc).
+6. **Hot-prefix exchange** — same 4-device mesh, hub-packed layout: run
+   the sharded traversals with and without ``hot_prefix_fraction`` and
+   report per-step exchanged bytes, the savings fraction, and the static
+   prefix hit rate — results must stay bit-identical either way.
 
 Emits benchmarks/results/engine.json.
 """
 from __future__ import annotations
 
 import json
-import os
-import subprocess
-import sys
 import textwrap
-import time
 
 import numpy as np
 
-from .common import bench_suite, fmt_table, save_json, time_call
+from .common import (bench_suite, fmt_table, run_forced_four_devices,
+                     save_json, time_call)
 
 
 def _phase_decisions(session, suite, batch, repeats):
@@ -184,44 +187,54 @@ def _phase_bucketing(scale, batch: int = 4):
     }
 
 
-def _phase_sharded(scale):
-    """4 forced host devices: serve an over-budget graph end-to-end.
+def _run_four_devices(prog: str):
+    """Run ``prog`` on 4 forced host devices; returns the json after its
+    RESULT line or an error dict."""
+    res = run_forced_four_devices(["-c", prog], timeout=900)
+    if res.returncode != 0:
+        return {"error": res.stderr[-2000:]}
+    line = next(l for l in res.stdout.splitlines() if l.startswith("RESULT "))
+    return json.loads(line[len("RESULT "):])
 
-    Runs in a subprocess because ``xla_force_host_platform_device_count``
-    must be set before jax initializes its backends.
-    """
+
+def _phase_sharded(scale):
+    """4 forced host devices: serve an over-budget graph end-to-end —
+    all six kernels, with parity against a single-device session serving
+    the same graph (same policy => same reorder => cc/ccsv label spaces
+    line up bit-for-bit)."""
     n = max(2000, int(20_000 * scale))
     prog = textwrap.dedent(f"""
         import json, time
         import numpy as np
         import jax, jax.numpy as jnp
         assert jax.device_count() == 4, jax.devices()
-        from repro.algos import kernels as K
-        from repro.algos.graph_arrays import to_device
         from repro.core.generators import powerlaw_community
         from repro.engine import EngineSession, estimate_device_bytes
 
         g = powerlaw_community({n}, avg_degree=10.0, seed=31, name="big")
         budget = estimate_device_bytes(g.num_vertices, g.num_edges) // 2
-        session = EngineSession(device_budget_bytes=budget)
+        session = EngineSession(device_budget_bytes=budget,
+                                redecide_min_queries=10**6)
         gid = session.register(g, expected_queries=256)
         entry = session.registry.get(gid)
         assert entry.backend == "sharded", entry.backend
+        ref = EngineSession(redecide_min_queries=10**6)  # single-device
+        rid = ref.register(g, graph_id="ref", expected_queries=256)
         srcs = np.arange(4) * (g.num_vertices // 5)
-        ga = to_device(g)
         walls, parity = {{}}, {{}}
-        for kernel in ("bfs", "sssp", "pr"):
-            args = (srcs,) if kernel != "pr" else ()
+        for kernel in ("bfs", "sssp", "bc", "pr", "cc", "ccsv"):
+            args = (srcs,) if kernel in ("bfs", "sssp", "bc") else ()
             t0 = time.perf_counter()
             out = session.submit(gid, kernel, *args)
             walls[kernel] = time.perf_counter() - t0
-        d = session.submit(gid, "bfs", srcs)
-        parity["bfs"] = all(
-            np.array_equal(d[i], np.asarray(K.bfs(ga, jnp.int32(s))))
-            for i, s in enumerate(srcs))
-        parity["pr"] = bool(np.allclose(
-            session.submit(gid, "pr"), np.asarray(K.pagerank(ga)),
-            rtol=1e-4, atol=1e-7))
+            want = ref.submit(rid, kernel, *args)
+            if kernel in ("pr", "bc"):
+                parity[kernel] = bool(np.allclose(out, want,
+                                                  rtol=1e-3, atol=1e-3))
+            else:
+                parity[kernel] = bool(np.array_equal(
+                    np.asarray(out), np.asarray(want)))
+        hp = session.executor.sharded.telemetry()["hot_prefix"]
         print("RESULT " + json.dumps({{
             "num_vertices": g.num_vertices,
             "num_edges": g.num_edges,
@@ -230,27 +243,18 @@ def _phase_sharded(scale):
                                                  g.num_edges),
             "per_device_bytes": entry.handle.device_bytes,
             "num_shards": session.executor.sharded.num_shards,
+            "hot_prefix_fraction": entry.hot_prefix_fraction,
             "wall_seconds": {{k: round(v, 4) for k, v in walls.items()}},
             "parity": parity,
             "ledger_backend": entry.ledger.backend,
             "gain_discount": entry.ledger.gain_discount,
+            "exchange": hp,
         }}))
     """)
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                        + " --xla_force_host_platform_device_count=4").strip()
-    env["JAX_PLATFORMS"] = "cpu"
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(root, "src"), env.get("PYTHONPATH", "")]).rstrip(
-        os.pathsep)
-    res = subprocess.run([sys.executable, "-c", prog], env=env,
-                         capture_output=True, text=True, timeout=900)
-    if res.returncode != 0:
-        print(f"[engine] sharded phase FAILED:\n{res.stderr}", flush=True)
-        return {"error": res.stderr[-2000:]}
-    line = next(l for l in res.stdout.splitlines() if l.startswith("RESULT "))
-    out = json.loads(line[len("RESULT "):])
+    out = _run_four_devices(prog)
+    if "error" in out:
+        print(f"[engine] sharded phase FAILED:\n{out['error']}", flush=True)
+        return out
     print(f"[engine] sharded: V={out['num_vertices']} across "
           f"{out['num_shards']} devices "
           f"(~{out['per_device_bytes'] / 1e6:.2f} MB/device vs "
@@ -258,6 +262,75 @@ def _phase_sharded(scale):
           + ", ".join(f"{k}={v * 1e3:.0f}ms"
                       for k, v in out["wall_seconds"].items())
           + f", parity={out['parity']}", flush=True)
+    return out
+
+
+def _phase_hot_prefix(scale):
+    """4 forced host devices, hub-packed layout: per-step exchanged bytes
+    with the hot-prefix exchange vs the full all-gather, at bit-identical
+    results (SSSP + CC: int32 state either way, so the comparison is
+    apples-to-apples; frontier BFS exchanges a bool frontier instead and
+    is reported for context)."""
+    n = max(2000, int(20_000 * scale))
+    prog = textwrap.dedent(f"""
+        import json
+        import numpy as np
+        import jax
+        assert jax.device_count() == 4, jax.devices()
+        from repro.core.baselines import dbg_order
+        from repro.core.dist import (ExchangeStats, make_distributed_cc,
+                                     make_distributed_sssp)
+        from repro.core.generators import powerlaw_community
+
+        g0 = powerlaw_community({n}, avg_degree=10.0, seed=31)
+        perm = np.asarray(dbg_order(g0))
+        g = g0.apply_permutation(perm)     # hubs packed into the prefix
+        inv = np.empty_like(perm); inv[perm] = np.arange(len(perm))
+        mesh = jax.make_mesh((4,), ("data",))
+        srcs = np.arange(4) * (g.num_vertices // 5)
+        out = {{}}
+        for kernel, frac in (("sssp", 0.15), ("cc", 0.15)):
+            full, hot = ExchangeStats(), ExchangeStats()
+            if kernel == "sssp":
+                run_f = make_distributed_sssp(g, mesh, canonical_ids=inv,
+                                              stats=full)
+                run_h = make_distributed_sssp(g, mesh, canonical_ids=inv,
+                                              hot_prefix_fraction=frac,
+                                              cold_every=5, stats=hot)
+                a, b = run_f(srcs), run_h(srcs)
+            else:
+                run_f = make_distributed_cc(g, mesh, stats=full)
+                run_h = make_distributed_cc(g, mesh,
+                                            hot_prefix_fraction=frac,
+                                            cold_every=5, stats=hot)
+                a, b = run_f(), run_h()
+            assert np.array_equal(np.asarray(a), np.asarray(b)), kernel
+            out[kernel] = {{
+                "hot_prefix_fraction": frac,
+                "prefix_hit_rate": round(run_h.prefix_hit_rate, 4),
+                "bytes_per_step_full": round(full.bytes_per_step, 1),
+                "bytes_per_step_hot": round(hot.bytes_per_step, 1),
+                "steps_full_variant": full.steps,
+                "steps_hot_variant": hot.steps,
+                "savings_fraction": round(hot.savings_fraction, 4),
+                "smaller_per_step": hot.bytes_per_step
+                                    < full.bytes_per_step,
+                "bit_identical": True,
+            }}
+        print("RESULT " + json.dumps(out))
+    """)
+    out = _run_four_devices(prog)
+    if "error" in out:
+        print(f"[engine] hot-prefix phase FAILED:\n{out['error']}",
+              flush=True)
+        return out
+    for kernel, r in out.items():
+        print(f"[engine] hot-prefix {kernel}: "
+              f"{r['bytes_per_step_full']:.0f} B/step full -> "
+              f"{r['bytes_per_step_hot']:.0f} B/step hot "
+              f"({100 * r['savings_fraction']:.0f}% fewer bytes vs "
+              f"all-full, hit rate {r['prefix_hit_rate']:.2f}, "
+              f"bit-identical={r['bit_identical']})", flush=True)
     return out
 
 
@@ -276,6 +349,7 @@ def run(scale: float = 0.5, batch: int = 8, repeats: int = 5) -> list[dict]:
     flip = _phase_calibration_flip(session, suite)
     bucketing = _phase_bucketing(scale)
     sharded = _phase_sharded(scale)
+    hot_prefix = _phase_hot_prefix(scale)
 
     out = {
         "rows": rows,
@@ -283,6 +357,7 @@ def run(scale: float = 0.5, batch: int = 8, repeats: int = 5) -> list[dict]:
         "calibration_flip": flip,
         "bucketing": bucketing,
         "sharded": sharded,
+        "hot_prefix": hot_prefix,
         "calibration": session.policy.calibrator.as_dict(),
         "executor": session.executor.telemetry(),
     }

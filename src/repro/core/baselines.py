@@ -1,5 +1,8 @@
 """Comparison reordering schemes (paper §3): Sort, DBG, HubSort/HubCluster,
-SOrder, NOrder and (windowed-greedy) GOrder, plus identity/random controls.
+SOrder, NOrder and (windowed-greedy) GOrder, plus identity/random controls —
+and host-side numpy *kernel baselines* (bottom of this module), the
+independent oracles every execution backend is checked against
+(tests/test_parity_matrix.py).
 
 All schemes return ``perm`` with ``perm[old_id] = new_id``.
 """
@@ -10,7 +13,7 @@ import heapq
 import numpy as np
 
 from .csr import Graph
-from .traversal import bfs_order
+from .traversal import bfs_levels, bfs_order
 
 
 # --------------------------------------------------------------- controls
@@ -201,6 +204,98 @@ def gorder_order(g: Graph, window: int = 8,
     perm = np.empty(n, dtype=np.int64)
     perm[order] = np.arange(n)
     return perm
+
+
+# ------------------------------------------------- numpy kernel baselines
+#
+# Pure-host reference implementations of the six served kernels, written
+# against a different execution model (python loops + np.ufunc.at) than
+# the JAX kernels so parity failures implicate the device path, not a
+# shared bug. BFS depths come from core.traversal.bfs_levels.
+
+
+def bfs_baseline(g: Graph, source: int) -> np.ndarray:
+    """(V,) hop depths, -1 unreached."""
+    return bfs_levels(g, source)
+
+
+def pagerank_baseline(g: Graph, damping: float = 0.85, iters: int = 20,
+                      tol: float = 1e-6) -> np.ndarray:
+    """(V,) PageRank, pull mode with uniform dangling redistribution."""
+    n = g.num_vertices
+    r = np.full(n, 1.0 / n)
+    outdeg = np.maximum(g.out_degree.astype(np.float64), 1.0)
+    t = g.transpose
+    for _ in range(iters):
+        contrib = r / outdeg
+        summed = np.zeros(n)
+        np.add.at(summed, t.edge_src, contrib[t.indices])
+        dangling = r[g.out_degree == 0].sum()
+        r_new = (1 - damping) / n + damping * (summed + dangling / n)
+        if np.abs(r_new - r).sum() <= tol:
+            return r_new
+        r = r_new
+    return r
+
+
+def cc_baseline(g: Graph) -> np.ndarray:
+    """(V,) component labels = min vertex id, union-find over symmetrized
+    edges (the labeling cc_labelprop converges to)."""
+    parent = np.arange(g.num_vertices)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in zip(g.edge_src, g.indices):
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    return np.array([find(v) for v in range(g.num_vertices)])
+
+
+def sssp_baseline(g: Graph, weights: np.ndarray, source: int) -> np.ndarray:
+    """(V,) Bellman-Ford distances for the given out-CSR-aligned weights."""
+    n = g.num_vertices
+    INF = np.int64(2**31 - 1)
+    dist = np.full(n, INF)
+    dist[source] = 0
+    for _ in range(n):
+        du = dist[g.edge_src]
+        cand = np.where(du == INF, INF, du + weights)
+        new = dist.copy()
+        np.minimum.at(new, g.indices, cand)
+        if np.array_equal(new, dist):
+            break
+        dist = new
+    return dist
+
+
+def bc_baseline(g: Graph, sources) -> np.ndarray:
+    """(V,) Brandes betweenness aggregated over ``sources`` (unweighted)."""
+    n = g.num_vertices
+    total = np.zeros(n)
+    for s in sources:
+        depth = bfs_levels(g, s)
+        sigma = np.zeros(n)
+        sigma[s] = 1.0
+        maxl = depth.max()
+        src, dst = g.edge_src, g.indices
+        tree = (depth[dst] == depth[src] + 1) & (depth[src] >= 0)
+        for lvl in range(maxl):
+            m = tree & (depth[src] == lvl)
+            np.add.at(sigma, dst[m], sigma[src[m]])
+        delta = np.zeros(n)
+        for lvl in range(maxl - 1, -1, -1):
+            m = tree & (depth[src] == lvl)
+            contrib = sigma[src[m]] / np.maximum(sigma[dst[m]], 1e-30) \
+                * (1.0 + delta[dst[m]])
+            np.add.at(delta, src[m], contrib)
+        delta[s] = 0.0
+        total += delta
+    return total
 
 
 # ---------------------------------------------------------------- registry

@@ -9,13 +9,33 @@ the property array); a traversal step is
 which is the pull-mode pattern of the paper mapped onto jax collectives.
 After LOrder, hot vertices are concentrated in low id ranges, so the
 all-gather payload that every shard actually *uses* is concentrated in a
-small prefix — the cluster-level analogue of cache-line locality. The
-`hot_prefix` variant exploits it by gathering only the hot prefix every
-iteration and exchanging the cold remainder at lower frequency.
+small prefix — the cluster-level analogue of cache-line locality.
+
+The **hot-prefix exchange** (`hot_prefix_fraction` on the traversal
+factories) exploits it: every step all-gathers only the first
+``h_local = ceil(fraction * per)`` entries of each shard's property
+slice; the cold remainder is refreshed by a full exchange every
+``cold_every`` steps and read from a per-shard stale cache in between.
+This is only applied to the *monotone min-relaxation* kernels (BFS as
+unit-weight Bellman-Ford, SSSP, CC label propagation): their state only
+ever decreases, so relaxing against stale — i.e. older, hence larger —
+remote values can never commit a wrong result, only delay convergence.
+Termination requires a **full** exchange step that changes nothing, so
+the returned fixed point is exactly the single-device result. PageRank
+and BC are level/iteration-synchronous and always exchange in full.
+`ExchangeStats` accounts the per-step exchanged bytes either way.
+
+All six serving kernels have distributed entry points here: PR
+(`make_distributed_pagerank`), multi-source BFS/SSSP
+(`make_distributed_bfs` / `make_distributed_sssp`), CC by min-label
+propagation (`make_distributed_cc`, also serving CC-SV: both converge to
+the min-id-per-component labeling), and multi-source BC
+(`make_distributed_bc`: BFS forward + sharded path counting + a
+src-partitioned dependency-accumulation backward pass).
 """
 from __future__ import annotations
 
-from functools import partial
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -30,22 +50,37 @@ except AttributeError:  # 0.4.x: experimental namespace
 from .csr import Graph
 
 
-def partition_edges(g: Graph, num_shards: int, edge_values=None):
-    """Split COO edges by dst range; pad shards to equal edge counts.
+def _shard_map_norep(f, mesh, in_specs, out_specs):
+    """shard_map with the replication check off — for steps returning an
+    all-gathered (hence genuinely replicated) array under a P(None, ...)
+    out_spec, which the static checker cannot infer. The kwarg was
+    renamed check_rep -> check_vma across jax versions."""
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
 
-    ``edge_values`` (optional, aligned with the graph's out-CSR edge
-    order, e.g. SSSP weights) is partitioned identically and returned as
-    a fifth array.
+
+def _partition_coo(src, dst, num_vertices: int, num_shards: int,
+                   edge_values=None):
+    """Split raw COO edges by dst range; pad shards to equal edge counts.
+
+    Returns ``(src_pad, dst_pad, valid, per[, values_pad])`` where
+    ``src_pad`` keeps *global* ids, ``dst_pad`` is localized to each
+    shard's ``[i*per, (i+1)*per)`` range, and ``valid`` masks padding.
+    Swapping the ``src``/``dst`` arguments partitions by source instead
+    (used by the BC backward pass, which accumulates at src).
     """
-    n = g.num_vertices
-    per = -(-n // num_shards)  # dst ids [i*per, (i+1)*per)
-    src = g.edge_src.astype(np.int32)
-    dst = np.asarray(g.indices, dtype=np.int32)
+    per = -(-num_vertices // num_shards)  # dst ids [i*per, (i+1)*per)
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
     shard_of = dst // per
     order = np.argsort(shard_of, kind="stable")
     src, dst = src[order], dst[order]
-    counts = np.bincount(shard_of, minlength=num_shards)
-    emax = int(counts.max())
+    counts = np.bincount(shard_of[order], minlength=num_shards)
+    emax = int(counts.max()) if counts.size else 0
     s_pad = np.zeros((num_shards, emax), np.int32)
     d_pad = np.zeros((num_shards, emax), np.int32)
     valid = np.zeros((num_shards, emax), bool)
@@ -65,8 +100,80 @@ def partition_edges(g: Graph, num_shards: int, edge_values=None):
     return s_pad, d_pad, valid, per
 
 
+def partition_edges(g: Graph, num_shards: int, edge_values=None):
+    """Split a graph's COO edges by dst range; pad shards equally.
+
+    ``edge_values`` (optional, aligned with the graph's out-CSR edge
+    order, e.g. SSSP weights) is partitioned identically and returned as
+    a fifth array.
+    """
+    return _partition_coo(g.edge_src, g.indices, g.num_vertices, num_shards,
+                          edge_values=edge_values)
+
+
+# ---------------------------------------------------------- exchange stats
+@dataclasses.dataclass
+class ExchangeStats:
+    """Per-step collective payload accounting for the sharded kernels.
+
+    A "step" is one sharded launch that all-gathers vertex property
+    state. Bytes count what one device *receives* per step:
+    ``(num_shards - 1) * slab_bytes`` — the remote share of the gathered
+    array. ``bytes_full_equivalent`` books what the same step would have
+    cost with a full exchange, so the hot-prefix saving is
+    ``1 - bytes_exchanged / bytes_full_equivalent``.
+    """
+
+    steps_full: int = 0
+    steps_hot: int = 0
+    bytes_full: int = 0
+    bytes_hot: int = 0
+    bytes_full_equivalent: int = 0
+
+    def record_full(self, nbytes: int) -> None:
+        self.steps_full += 1
+        self.bytes_full += nbytes
+        self.bytes_full_equivalent += nbytes
+
+    def record_hot(self, nbytes: int, full_nbytes: int) -> None:
+        self.steps_hot += 1
+        self.bytes_hot += nbytes
+        self.bytes_full_equivalent += full_nbytes
+
+    @property
+    def steps(self) -> int:
+        return self.steps_full + self.steps_hot
+
+    @property
+    def bytes_exchanged(self) -> int:
+        return self.bytes_full + self.bytes_hot
+
+    @property
+    def bytes_per_step(self) -> float:
+        return self.bytes_exchanged / max(self.steps, 1)
+
+    @property
+    def savings_fraction(self) -> float:
+        if self.bytes_full_equivalent <= 0:
+            return 0.0
+        return 1.0 - self.bytes_exchanged / self.bytes_full_equivalent
+
+    def as_dict(self) -> dict:
+        return {
+            "steps_full": self.steps_full,
+            "steps_hot": self.steps_hot,
+            "bytes_full": self.bytes_full,
+            "bytes_hot": self.bytes_hot,
+            "bytes_exchanged": self.bytes_exchanged,
+            "bytes_full_equivalent": self.bytes_full_equivalent,
+            "bytes_per_step": round(self.bytes_per_step, 1),
+            "savings_fraction": round(self.savings_fraction, 4),
+        }
+
+
 def make_distributed_pagerank(g: Graph, mesh: Mesh, axis: str = "data",
-                              damping: float = 0.85, num_iters: int = 20):
+                              damping: float = 0.85, num_iters: int = 20,
+                              stats: ExchangeStats | None = None):
     """Returns (step_fn, initial_rank) running PR over `axis` of `mesh`."""
     num_shards = mesh.shape[axis]
     s_pad, d_pad, valid, per = partition_edges(g, num_shards)
@@ -105,12 +212,19 @@ def make_distributed_pagerank(g: Graph, mesh: Mesh, axis: str = "data",
         out_specs=P(axis, None),
     ))
 
+    # PR's power iteration is synchronous: every step needs a consistent
+    # full view, so there is no hot-prefix variant — two f32 gathers
+    # (rank + outdeg) per iteration, accounted in full.
+    iter_bytes = 2 * (num_shards - 1) * per * 4
+
     def run(rank0=None):
         r = rank0 if rank0 is not None else jax.device_put(
             np.full(n_pad, 1.0 / n, np.float32), vspec)
         for _ in range(num_iters):
             r = sharded_step(r, s_sh, d_sh, v_sh, deg_sh,
                              dang_sh).reshape(n_pad)
+            if stats is not None:
+                stats.record_full(iter_bytes)
         return r[:n]
 
     return run, vspec
@@ -124,10 +238,10 @@ def lower_distributed_pagerank(g: Graph, mesh: Mesh, axis: str = "data"):
 
 # ------------------------------------------------- multi-source traversals
 #
-# Serving parity with the single-device engine: batched BFS / SSSP where
-# the (S, V) property matrix is sharded along the *vertex* axis and each
-# level/relaxation step all-gathers it. The outer iteration is a host
-# loop with a device-side convergence flag (same structure as the PR
+# Serving parity with the single-device engine: batched BFS / SSSP / CC /
+# BC where the (S, V) property matrix is sharded along the *vertex* axis
+# and each level/relaxation step all-gathers it. The outer iteration is a
+# host loop with a device-side convergence flag (same structure as the PR
 # driver above) — one sharded launch per level, bounded by eccentricity
 # (BFS) or V (Bellman-Ford).
 
@@ -139,8 +253,139 @@ def _put_state(values: np.ndarray, mesh: Mesh, axis: str):
     return jax.device_put(values, NamedSharding(mesh, P(None, axis)))
 
 
-def make_distributed_bfs(g: Graph, mesh: Mesh, axis: str = "data"):
-    """Returns run(sources) -> (S, V) BFS depths over `axis` of `mesh`."""
+# ------------------------------------------- hot-prefix min-relaxation core
+def _make_minrelax_runner(coo_src, coo_dst, edge_w, num_vertices: int,
+                          mesh: Mesh, axis: str,
+                          hot_prefix_fraction: float | None = None,
+                          cold_every: int = 4,
+                          stats: ExchangeStats | None = None):
+    """Generic monotone min-relaxation to a fixed point over shard_map.
+
+    State is an int32 ``(S, n_pad)`` matrix sharded on the vertex axis;
+    one step relaxes ``state[dst] = min(state[dst], state[src] + w)`` over
+    the dst-partitioned edge set. With ``hot_prefix_fraction`` set, hot
+    steps gather only each shard's first ``h_local`` entries and read the
+    cold remainder from the cache left by the last full exchange; the
+    shard's *own* slice is always read live. Because state is monotone
+    non-increasing, stale (older = larger) remote values can only delay a
+    relaxation, never commit a wrong one — and the loop terminates only
+    when a **full**-exchange step changes nothing, i.e. at the exact
+    global fixed point.
+
+    Returns ``run(state0) -> (S, n_pad) final state`` with
+    ``run.h_local``, ``run.per``, ``run.hot_prefix_fraction`` and the
+    static ``run.prefix_hit_rate`` (fraction of edge-source reads served
+    fresh: local to the shard, or inside the gathered hot prefix).
+    """
+    num_shards = mesh.shape[axis]
+    cold_every = max(int(cold_every), 1)
+    s_pad, d_pad, valid, per, w_pad = _partition_coo(
+        coo_src, coo_dst, num_vertices, num_shards,
+        edge_values=np.asarray(edge_w, np.int32))
+    n_pad = per * num_shards
+    f = hot_prefix_fraction
+    h_local = per if f is None else min(per, max(1, int(np.ceil(f * per))))
+
+    espec = NamedSharding(mesh, P(axis, None))
+    s_sh = jax.device_put(s_pad, espec)
+    d_sh = jax.device_put(d_pad, espec)
+    v_sh = jax.device_put(valid, espec)
+    w_sh = jax.device_put(w_pad, espec)
+
+    def _relax(state, view, src_e, dst_e, val_e, w_e):
+        du = view[:, src_e[0]]                               # (S, e_local)
+        cand = jnp.where(val_e[0] & (du != _INF_I32), du + w_e[0], _INF_I32)
+        relaxed = jax.vmap(
+            lambda c: jax.ops.segment_min(c, dst_e[0], num_segments=per)
+        )(cand)
+        new = jnp.minimum(state, relaxed)
+        # replicated convergence flag, as the P() out_spec requires
+        changed = jax.lax.psum((new != state).any().astype(jnp.int32), axis)
+        return new, changed > 0
+
+    def step_full(state, src_e, dst_e, val_e, w_e):
+        full = jax.lax.all_gather(state, axis, axis=1, tiled=True)
+        new, changed = _relax(state, full, src_e, dst_e, val_e, w_e)
+        # the gathered view doubles as the cold cache until the next full
+        # exchange; identical on every shard, hence the replicated spec
+        return new, full, changed
+
+    sharded_full = jax.jit(_shard_map_norep(
+        step_full, mesh=mesh,
+        in_specs=(P(None, axis), P(axis, None), P(axis, None),
+                  P(axis, None), P(axis, None)),
+        out_specs=(P(None, axis), P(None, None), P()),
+    ))
+
+    def step_hot(state, cache, src_e, dst_e, val_e, w_e):
+        # gather only the hot prefix of every shard's slice ...
+        fresh = jax.lax.all_gather(state[:, :h_local], axis,
+                                   axis=0, tiled=False)  # (shards, S, h)
+        view = cache.reshape(cache.shape[0], num_shards, per)
+        view = view.at[:, :, :h_local].set(jnp.transpose(fresh, (1, 0, 2)))
+        # ... and read the shard's own slice live, not from the cache
+        view = jax.lax.dynamic_update_slice_in_dim(
+            view, state[:, None, :], jax.lax.axis_index(axis), axis=1)
+        view = view.reshape(cache.shape[0], n_pad)
+        return _relax(state, view, src_e, dst_e, val_e, w_e)
+
+    sharded_hot = jax.jit(_shard_map(
+        step_hot, mesh=mesh,
+        in_specs=(P(None, axis), P(None, None), P(axis, None),
+                  P(axis, None), P(axis, None), P(axis, None)),
+        out_specs=(P(None, axis), P()),
+    ))
+
+    def run(state0):
+        s = int(np.asarray(state0).shape[0])
+        state = _put_state(np.asarray(state0, np.int32), mesh, axis)
+        full_b = (num_shards - 1) * per * 4 * s
+        hot_b = (num_shards - 1) * h_local * 4 * s
+        cache = None
+        full_due = True
+        # distance info crosses at least one hop per full exchange even
+        # in the worst case, so the fixed point is reached well inside
+        # V * cold_every steps; the bound is a backstop, not the driver
+        for it in range(num_vertices * cold_every + cold_every + 2):
+            if f is None or full_due or it % cold_every == 0:
+                state, cache, changed = sharded_full(state, s_sh, d_sh,
+                                                     v_sh, w_sh)
+                if stats is not None:
+                    stats.record_full(full_b)
+                full_due = False
+                if not bool(changed):
+                    break  # fixed point certified against the full view
+            else:
+                state, changed = sharded_hot(state, cache, s_sh, d_sh,
+                                             v_sh, w_sh)
+                if stats is not None:
+                    stats.record_hot(hot_b, full_b)
+                if not bool(changed):
+                    full_due = True  # locally quiesced: verify in full
+        return state
+
+    if f is None:
+        run.prefix_hit_rate = 1.0
+    else:
+        own = (s_pad // per) == np.arange(num_shards)[:, None]
+        hit = (own | ((s_pad % per) < h_local)) & valid
+        nvalid = int(valid.sum())
+        run.prefix_hit_rate = float(hit.sum() / nvalid) if nvalid else 1.0
+    run.h_local, run.per, run.hot_prefix_fraction = h_local, per, f
+    return run
+
+
+def _copy_prefix_attrs(run, relax) -> None:
+    run.prefix_hit_rate = relax.prefix_hit_rate
+    run.h_local, run.per = relax.h_local, relax.per
+    run.hot_prefix_fraction = relax.hot_prefix_fraction
+
+
+# ------------------------------------------------------------------- BFS
+def _make_bfs_frontier(g: Graph, mesh: Mesh, axis: str,
+                       stats: ExchangeStats | None):
+    """Level-synchronous frontier BFS; returns run(sources) -> sharded
+    (S, n_pad) depth (the full-exchange path, also BC's forward pass)."""
     num_shards = mesh.shape[axis]
     s_pad, d_pad, valid, per = partition_edges(g, num_shards)
     n, n_pad = g.num_vertices, per * num_shards
@@ -170,7 +415,7 @@ def make_distributed_bfs(g: Graph, mesh: Mesh, axis: str = "data"):
         out_specs=(P(None, axis), P(None, axis), P()),
     ))
 
-    def run(sources):
+    def run_full(sources):
         srcs = np.atleast_1d(np.asarray(sources, np.int64))
         s = srcs.size
         depth0 = np.full((s, n_pad), -1, np.int32)
@@ -179,34 +424,102 @@ def make_distributed_bfs(g: Graph, mesh: Mesh, axis: str = "data"):
         front0[np.arange(s), srcs] = True
         depth = _put_state(depth0, mesh, axis)
         front = _put_state(front0, mesh, axis)
+        level_bytes = (num_shards - 1) * per * 1 * s  # bool frontier
         # do-while: the initial frontier is never empty (sources exist)
         for level in range(n):
             depth, front, alive = sharded_step(depth, front,
                                                jnp.int32(level),
                                                s_sh, d_sh, v_sh)
+            if stats is not None:
+                stats.record_full(level_bytes)
             if not bool(alive):
                 break
-        return depth[:, :n]
+        return depth
 
+    run_full.per = per
+    # the dst-partitioned edge uploads, reusable by passes that share the
+    # same partition (BC's forward σ pass) — one partition, one upload
+    run_full.edge_shards = (s_sh, d_sh, v_sh)
+    return run_full
+
+
+def make_distributed_bfs(g: Graph, mesh: Mesh, axis: str = "data",
+                         hot_prefix_fraction: float | None = None,
+                         cold_every: int = 4,
+                         stats: ExchangeStats | None = None):
+    """Returns run(sources) -> (S, V) BFS depths over `axis` of `mesh`.
+
+    With ``hot_prefix_fraction`` set, BFS runs as unit-weight Bellman-Ford
+    through the hot-prefix min-relaxation driver (exact depths; the level
+    counter of the frontier formulation cannot tolerate stale frontiers,
+    min-relaxation can). Without it, the level-synchronous frontier path
+    exchanges the full frontier every step.
+    """
+    n = g.num_vertices
+    if hot_prefix_fraction is None:
+        run_full = _make_bfs_frontier(g, mesh, axis, stats)
+
+        def run(sources):
+            return run_full(sources)[:, :n]
+
+        run.prefix_hit_rate, run.hot_prefix_fraction = 1.0, None
+        run.per = run_full.per
+        run.h_local = run_full.per
+        return run
+
+    unit = np.ones(g.num_edges, np.int32)
+    relax = _make_minrelax_runner(g.edge_src, g.indices, unit, n, mesh, axis,
+                                  hot_prefix_fraction, cold_every, stats)
+    n_pad = relax.per * mesh.shape[axis]
+
+    def run(sources):
+        srcs = np.atleast_1d(np.asarray(sources, np.int64))
+        state0 = np.full((srcs.size, n_pad), _INF_I32, np.int32)
+        state0[np.arange(srcs.size), srcs] = 0
+        dist = relax(state0)
+        return jnp.where(dist == _INF_I32, -1, dist)[:, :n]
+
+    _copy_prefix_attrs(run, relax)
     return run
 
 
 def make_distributed_sssp(g: Graph, mesh: Mesh, axis: str = "data",
-                          canonical_ids=None):
+                          canonical_ids=None,
+                          hot_prefix_fraction: float | None = None,
+                          cold_every: int = 4,
+                          stats: ExchangeStats | None = None):
     """Returns run(sources) -> (S, V) Bellman-Ford distances.
 
     Weights are the engine's canonical per-edge hash
     (`algos.graph_arrays.edge_weights`, relabel-invariant through
     ``canonical_ids``), so sharded distances match the single-device
-    executor exactly.
+    executor exactly — with or without the hot-prefix exchange
+    (Bellman-Ford is monotone, see `_make_minrelax_runner`).
     """
     from ..algos.graph_arrays import edge_weights
 
-    num_shards = mesh.shape[axis]
+    n = g.num_vertices
     w = edge_weights(g.edge_src, g.indices, canonical_ids)
+
+    if hot_prefix_fraction is not None:
+        relax = _make_minrelax_runner(g.edge_src, g.indices, w, n, mesh,
+                                      axis, hot_prefix_fraction, cold_every,
+                                      stats)
+        n_pad = relax.per * mesh.shape[axis]
+
+        def run(sources):
+            srcs = np.atleast_1d(np.asarray(sources, np.int64))
+            state0 = np.full((srcs.size, n_pad), _INF_I32, np.int32)
+            state0[np.arange(srcs.size), srcs] = 0
+            return relax(state0)[:, :n]
+
+        _copy_prefix_attrs(run, relax)
+        return run
+
+    num_shards = mesh.shape[axis]
     s_pad, d_pad, valid, per, w_pad = partition_edges(g, num_shards,
                                                       edge_values=w)
-    n, n_pad = g.num_vertices, per * num_shards
+    n_pad = per * num_shards
     espec = NamedSharding(mesh, P(axis, None))
     s_sh = jax.device_put(s_pad, espec)
     d_sh = jax.device_put(d_pad, espec)
@@ -240,10 +553,190 @@ def make_distributed_sssp(g: Graph, mesh: Mesh, axis: str = "data",
         dist0 = np.full((s, n_pad), _INF_I32, np.int32)
         dist0[np.arange(s), srcs] = 0
         dist = _put_state(dist0, mesh, axis)
+        step_bytes = (num_shards - 1) * per * 4 * s
         for _ in range(n):
             dist, changed = sharded_step(dist, s_sh, d_sh, v_sh, w_sh)
+            if stats is not None:
+                stats.record_full(step_bytes)
             if not bool(changed):
                 break
         return dist[:, :n]
 
+    run.prefix_hit_rate, run.hot_prefix_fraction = 1.0, None
+    run.per = per
+    run.h_local = per
+    return run
+
+
+# -------------------------------------------------- Connected Components
+def make_distributed_cc(g: Graph, mesh: Mesh, axis: str = "data",
+                        hot_prefix_fraction: float | None = None,
+                        cold_every: int = 4,
+                        stats: ExchangeStats | None = None):
+    """Returns run() -> (V,) min-label CC over the symmetrized edges.
+
+    Min-label propagation is a monotone min-relaxation (weight 0 over the
+    symmetrized edge set), so it runs through the same driver as the
+    hot-prefix traversals — with ``hot_prefix_fraction`` unset every step
+    is a full exchange. Converges to the min-vertex-id-per-component
+    labeling, bit-identical to `algos.kernels.cc_labelprop`; CC-SV
+    reaches the same labeling, so this runner serves both cc and ccsv.
+    """
+    n = g.num_vertices
+    src = np.concatenate([np.asarray(g.edge_src), np.asarray(g.indices)])
+    dst = np.concatenate([np.asarray(g.indices), np.asarray(g.edge_src)])
+    relax = _make_minrelax_runner(src, dst, np.zeros(src.size, np.int32), n,
+                                  mesh, axis, hot_prefix_fraction,
+                                  cold_every, stats)
+    n_pad = relax.per * mesh.shape[axis]
+
+    def run():
+        lab0 = np.arange(n_pad, dtype=np.int32)[None, :]
+        return relax(lab0)[0, :n]
+
+    _copy_prefix_attrs(run, relax)
+    return run
+
+
+# -------------------------------------------- Betweenness Centrality (BC)
+def make_distributed_bc(g: Graph, mesh: Mesh, axis: str = "data",
+                        stats: ExchangeStats | None = None):
+    """Returns run(sources) -> (S, V) per-source Brandes dependencies.
+
+    Three sharded passes, mirroring `algos.kernels.bc_single_source`:
+
+    1. **forward depths** — the frontier BFS above, kept sharded;
+    2. **path counts** — per level, all-gather sigma and segment-sum the
+       tree-edge contributions into local dst (edges partitioned by dst);
+    3. **dependency accumulation** — per level backwards, all-gather
+       delta and accumulate ``sigma[u]/sigma[v] * (1 + delta[v])`` into
+       local src over a *source-partitioned* copy of the edges (the
+       backward pass scatters to src, so dst-partitioned edges would
+       need a cross-shard scatter).
+
+    Level-synchronous float accumulation: no hot-prefix variant (the
+    per-level sums need a consistent view), and results are numerically
+    close — not bit-identical — to the single-device kernel because the
+    segment-sum order differs.
+    """
+    num_shards = mesh.shape[axis]
+    n = g.num_vertices
+    bfs_full = _make_bfs_frontier(g, mesh, axis, stats)
+    per = bfs_full.per
+    n_pad = per * num_shards
+
+    espec = NamedSharding(mesh, P(axis, None))
+    # forward: dst-partitioned (sigma accumulates at dst) — the exact
+    # partition the frontier BFS already uploaded, so reuse it
+    s_sh, d_sh, v_sh = bfs_full.edge_shards
+    # backward: src-partitioned (delta accumulates at src); swapping the
+    # COO roles localizes src and keeps dst global
+    bd_pad, bs_pad, bvalid, per_b = _partition_coo(g.indices, g.edge_src, n,
+                                                   num_shards)
+    assert per_b == per
+    bd_sh = jax.device_put(bd_pad, espec)   # global dst ids
+    bs_sh = jax.device_put(bs_pad, espec)   # local src indices
+    bv_sh = jax.device_put(bvalid, espec)
+
+    def fwd_prep(depth, src_e, dst_e, val_e):
+        full_depth = jax.lax.all_gather(depth, axis, axis=1, tiled=True)
+        du = full_depth[:, src_e[0]]                      # (S, e_local)
+        dv = depth[:, dst_e[0]]                           # dst is local
+        tree = (dv == du + 1) & (du >= 0) & val_e[0]
+        return du, tree
+
+    sharded_fwd_prep = jax.jit(_shard_map(
+        fwd_prep, mesh=mesh,
+        in_specs=(P(None, axis), P(axis, None), P(axis, None),
+                  P(axis, None)),
+        out_specs=(P(None, axis), P(None, axis)),
+    ))
+
+    def fwd_step(sigma, du, tree, src_e, dst_e, level):
+        full_sigma = jax.lax.all_gather(sigma, axis, axis=1, tiled=True)
+        add_e = jnp.where(tree & (du == level),
+                          full_sigma[:, src_e[0]], 0.0)
+        add = jax.vmap(
+            lambda c: jax.ops.segment_sum(c, dst_e[0], num_segments=per)
+        )(add_e)
+        return sigma + add
+
+    sharded_fwd_step = jax.jit(_shard_map(
+        fwd_step, mesh=mesh,
+        in_specs=(P(None, axis), P(None, axis), P(None, axis),
+                  P(axis, None), P(axis, None), P()),
+        out_specs=P(None, axis),
+    ))
+
+    def bwd_prep(depth, sigma, bsrc_e, bdst_e, bval_e):
+        full_depth = jax.lax.all_gather(depth, axis, axis=1, tiled=True)
+        du = depth[:, bsrc_e[0]]                          # src is local
+        dv = full_depth[:, bdst_e[0]]
+        tree = (dv == du + 1) & (du >= 0) & bval_e[0]
+        # sigma is fixed during the backward pass: gather it once and
+        # keep the replicated copy instead of re-gathering per level
+        sig_full = jax.lax.all_gather(sigma, axis, axis=1, tiled=True)
+        return du, tree, sig_full
+
+    sharded_bwd_prep = jax.jit(_shard_map_norep(
+        bwd_prep, mesh=mesh,
+        in_specs=(P(None, axis), P(None, axis), P(axis, None),
+                  P(axis, None), P(axis, None)),
+        out_specs=(P(None, axis), P(None, axis), P(None, None)),
+    ))
+
+    def bwd_step(delta, sig_full, du, tree, bsrc_e, bdst_e, level):
+        full_delta = jax.lax.all_gather(delta, axis, axis=1, tiled=True)
+        mask = tree & (du == level)
+        base = jax.lax.axis_index(axis) * per
+        sig_u = sig_full[:, base + bsrc_e[0]]
+        sig_v = jnp.maximum(sig_full[:, bdst_e[0]], 1e-30)
+        contrib = jnp.where(
+            mask, sig_u / sig_v * (1.0 + full_delta[:, bdst_e[0]]), 0.0)
+        add = jax.vmap(
+            lambda c: jax.ops.segment_sum(c, bsrc_e[0], num_segments=per)
+        )(contrib)
+        return delta + add
+
+    sharded_bwd_step = jax.jit(_shard_map(
+        bwd_step, mesh=mesh,
+        in_specs=(P(None, axis), P(None, None), P(None, axis),
+                  P(None, axis), P(axis, None), P(axis, None), P()),
+        out_specs=P(None, axis),
+    ))
+
+    def run(sources):
+        srcs = np.atleast_1d(np.asarray(sources, np.int64))
+        s = srcs.size
+        step_bytes = (num_shards - 1) * per * 4 * s
+        depth = bfs_full(srcs)                        # (S, n_pad) sharded
+        max_level = int(np.asarray(depth[:, :n]).max())
+        du_f, tree_f = sharded_fwd_prep(depth, s_sh, d_sh, v_sh)
+        sigma0 = np.zeros((s, n_pad), np.float32)
+        sigma0[np.arange(s), srcs] = 1.0
+        sigma = _put_state(sigma0, mesh, axis)
+        if stats is not None:
+            stats.record_full(step_bytes)             # fwd_prep depth gather
+        for level in range(max_level + 1):
+            sigma = sharded_fwd_step(sigma, du_f, tree_f, s_sh, d_sh,
+                                     jnp.int32(level))
+            if stats is not None:
+                stats.record_full(step_bytes)
+        du_b, tree_b, sig_full = sharded_bwd_prep(depth, sigma, bs_sh,
+                                                  bd_sh, bv_sh)
+        if stats is not None:
+            stats.record_full(2 * step_bytes)         # depth + sigma gathers
+        delta = _put_state(np.zeros((s, n_pad), np.float32), mesh, axis)
+        for level in range(max_level - 1, -1, -1):
+            delta = sharded_bwd_step(delta, sig_full, du_b, tree_b, bs_sh,
+                                     bd_sh, jnp.int32(level))
+            if stats is not None:
+                stats.record_full(step_bytes)
+        out = np.array(delta)[:, :n]
+        out[np.arange(s), srcs] = 0.0
+        return jnp.asarray(out)
+
+    run.prefix_hit_rate, run.hot_prefix_fraction = 1.0, None
+    run.per = per
+    run.h_local = per
     return run

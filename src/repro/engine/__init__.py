@@ -9,8 +9,8 @@ the policy's per-scheme strengths (calibration.py), and the session
 re-decides — re-reordering in place — when realized traffic diverges
 from the registration hint or a reorder provably cannot amortize.
 """
-from .backends import (ExecutionBackend, GraphHandle, ShardedBackend,
-                       SingleDeviceBackend, bucket_dims,
+from .backends import (SHARDED_KERNELS, ExecutionBackend, GraphHandle,
+                       ShardedBackend, SingleDeviceBackend, bucket_dims,
                        estimate_device_bytes)
 from .calibration import DEFAULT_PRIORS, SchemeStats, StrengthCalibrator
 from .executor import BatchedExecutor
@@ -22,7 +22,8 @@ __all__ = [
     "AmortizationLedger", "BatchedExecutor", "DEFAULT_PRIORS",
     "EngineSession", "ExecutionBackend", "GraphHandle", "GraphProbes",
     "GraphRegistry", "PolicyDecision", "PolicyRecord", "ReorderPolicy",
-    "SchemeStats", "ShardedBackend", "SingleDeviceBackend",
+    "SHARDED_KERNELS", "SchemeStats", "ShardedBackend",
+    "SingleDeviceBackend",
     "StrengthCalibrator", "bucket_dims", "estimate_device_bytes",
     "probe_graph",
 ]

@@ -13,8 +13,12 @@ volume:
   on the real ``[:V]`` prefix stay exact.
 * **single-device memory** — a graph whose CSR working set exceeds the
   per-device budget has no serving path. `ShardedBackend` routes queries
-  through `core.dist`'s edge-partitioned kernels (multi-source BFS/SSSP +
-  PageRank) across every visible device.
+  through `core.dist`'s edge-partitioned kernels — all six (multi-source
+  BFS/SSSP/BC, PageRank, CC, CC-SV) — across every visible device, with
+  an optional **hot-prefix exchange** (`hot_prefix_fraction`, a policy
+  decision derived from the hub-mass probe) that all-gathers only the
+  hot id prefix every step and the cold suffix every ``cold_every``
+  steps on the monotone kernels, exactness-preserving (core/dist.py).
 
 Both present the same surface (`ExecutionBackend`): ``prepare`` turns a
 host graph into a `GraphHandle`, ``run`` executes one query batch against
@@ -141,6 +145,7 @@ class GraphHandle:
     device_bytes: int
     arrays: GraphArrays | None = None
     shard_state: object | None = None
+    hot_prefix_fraction: float | None = None  # sharded exchange policy
 
 
 @runtime_checkable
@@ -246,41 +251,91 @@ class SingleDeviceBackend:
 
 
 # ----------------------------------------------------------------- sharded
-class _ShardState:
+def _make_sharded_bfs(st):
+    from ..core import dist
+    return dist.make_distributed_bfs(
+        st.graph, st.mesh, st.axis,
+        hot_prefix_fraction=st.hot_prefix_fraction,
+        cold_every=st.cold_every, stats=st.stats)
+
+
+def _make_sharded_sssp(st):
+    from ..core import dist
+    return dist.make_distributed_sssp(
+        st.graph, st.mesh, st.axis, canonical_ids=st.canonical_ids,
+        hot_prefix_fraction=st.hot_prefix_fraction,
+        cold_every=st.cold_every, stats=st.stats)
+
+
+def _make_sharded_pr(st):
+    from ..core import dist
+    # synchronous power iteration: always a full exchange (core/dist.py)
+    run, _ = dist.make_distributed_pagerank(st.graph, st.mesh, st.axis,
+                                            stats=st.stats)
+    return run
+
+
+def _make_sharded_cc(st):
+    from ..core import dist
+    return dist.make_distributed_cc(
+        st.graph, st.mesh, st.axis,
+        hot_prefix_fraction=st.hot_prefix_fraction,
+        cold_every=st.cold_every, stats=st.stats)
+
+
+def _make_sharded_bc(st):
+    from ..core import dist
+    # level-synchronous float accumulation: always a full exchange
+    return dist.make_distributed_bc(st.graph, st.mesh, st.axis,
+                                    stats=st.stats)
+
+
+# Every served kernel has a sharded runner factory — full six-kernel
+# parity with the single-device backend. CC-SV shares the min-label
+# runner: both converge to the min-id-per-component labeling, and the
+# alias makes cc/ccsv share one cached runner (one edge partition, one
+# compile) instead of building two identical ones.
+_RUNNER_FACTORIES = {
+    "bfs": _make_sharded_bfs,
+    "sssp": _make_sharded_sssp,
+    "bc": _make_sharded_bc,
+    "pr": _make_sharded_pr,
+    "cc": _make_sharded_cc,
+    "ccsv": _make_sharded_cc,
+}
+_RUNNER_ALIASES = {"ccsv": "cc"}
+
+SHARDED_KERNELS = tuple(_RUNNER_FACTORIES)
+
+
+class _ShardedGraphState:
     """Per-graph device state for `ShardedBackend` (lazy kernel factories)."""
 
     def __init__(self, graph: Graph, mesh, axis: str,
-                 canonical_ids: np.ndarray | None):
+                 canonical_ids: np.ndarray | None,
+                 hot_prefix_fraction: float | None, cold_every: int,
+                 stats):
         self.graph = graph
         self.mesh = mesh
         self.axis = axis
         self.canonical_ids = canonical_ids
+        self.hot_prefix_fraction = hot_prefix_fraction
+        self.cold_every = cold_every
+        self.stats = stats
         self._runners: dict[str, object] = {}
 
     def runner(self, kernel: str):
+        kernel = _RUNNER_ALIASES.get(kernel, kernel)
         fn = self._runners.get(kernel)
         if fn is None:
-            from ..core import dist
-            if kernel == "bfs":
-                fn = dist.make_distributed_bfs(self.graph, self.mesh,
-                                               self.axis)
-            elif kernel == "sssp":
-                fn = dist.make_distributed_sssp(
-                    self.graph, self.mesh, self.axis,
-                    canonical_ids=self.canonical_ids)
-            elif kernel == "pr":
-                fn, _ = dist.make_distributed_pagerank(self.graph, self.mesh,
-                                                       self.axis)
-            else:
-                raise NotImplementedError(
-                    f"ShardedBackend serves {SHARDED_KERNELS}, not "
-                    f"{kernel!r}; register under the single-device budget "
-                    f"or extend core/dist.py")
+            # unknown kernel names are rejected by build_kernel before we
+            # get here, so a miss in the factory table is a parity bug
+            assert kernel in _RUNNER_FACTORIES, (
+                f"kernel {kernel!r} is served but has no sharded runner "
+                f"factory; SHARDED_KERNELS = {SHARDED_KERNELS}")
+            fn = _RUNNER_FACTORIES[kernel](self)
             self._runners[kernel] = fn
         return fn
-
-
-SHARDED_KERNELS = ("bfs", "sssp", "pr")
 
 
 class ShardedBackend:
@@ -290,30 +345,43 @@ class ShardedBackend:
     (every visible device by default); vertex property state lives sharded
     and each traversal step all-gathers it — see core/dist.py for why
     reordering concentrates the *useful* payload of that collective.
+    ``prepare``'s ``hot_prefix_fraction`` (a policy decision) turns on the
+    hot-prefix exchange for the monotone kernels: only that fraction of
+    each shard's slice is gathered per step, the cold suffix every
+    ``cold_every`` steps. `telemetry()["hot_prefix"]` reports the
+    exchanged-vs-full byte ledger and static prefix hit rates.
     """
 
     name = "sharded"
 
     def __init__(self, num_shards: int | None = None, axis: str = "data",
-                 mesh=None):
+                 mesh=None, cold_every: int = 4):
         if mesh is None:
             n = num_shards or jax.device_count()
             mesh = jax.make_mesh((n,), (axis,))
         self.mesh = mesh
         self.axis = axis
         self.num_shards = mesh.shape[axis]
+        self.cold_every = cold_every
         self.queries_run = 0
         self.sources_run = 0
         self.graphs_prepared = 0
+        from ..core.dist import ExchangeStats
+        self.exchange_stats = ExchangeStats()
+        self._prefix_info: list[dict] = []
 
     def prepare(self, graph: Graph,
-                canonical_ids: np.ndarray | None = None) -> GraphHandle:
+                canonical_ids: np.ndarray | None = None,
+                hot_prefix_fraction: float | None = None) -> GraphHandle:
         n, e = graph.num_vertices, graph.num_edges
-        state = _ShardState(graph, self.mesh, self.axis, canonical_ids)
+        state = _ShardedGraphState(graph, self.mesh, self.axis,
+                                   canonical_ids, hot_prefix_fraction,
+                                   self.cold_every, self.exchange_stats)
         self.graphs_prepared += 1
         return GraphHandle(self.name, n, e, (n, e),
                            self._per_device_bytes(graph),
-                           shard_state=state)
+                           shard_state=state,
+                           hot_prefix_fraction=hot_prefix_fraction)
 
     def _per_device_bytes(self, graph: Graph) -> int:
         """Resident graph bytes per device, from the *actual* partition.
@@ -333,7 +401,19 @@ class ShardedBackend:
 
     def run(self, handle: GraphHandle, kernel: str,
             sources=None) -> jnp.ndarray:
+        build_kernel(kernel)  # unknown kernel: raise before anything counts
+        canon = _RUNNER_ALIASES.get(kernel, kernel)
+        new_runner = canon not in handle.shard_state._runners
         runner = handle.shard_state.runner(kernel)
+        if new_runner and getattr(runner, "hot_prefix_fraction",
+                                  None) is not None:
+            self._prefix_info.append({
+                "kernel": canon,
+                "hot_prefix_fraction": runner.hot_prefix_fraction,
+                "h_local": runner.h_local,
+                "per_shard_vertices": runner.per,
+                "prefix_hit_rate": round(runner.prefix_hit_rate, 4),
+            })
         self.queries_run += 1
         if kernel in GLOBAL:
             return jax.block_until_ready(runner())[:handle.num_vertices]
@@ -348,4 +428,9 @@ class ShardedBackend:
             "graphs_prepared": self.graphs_prepared,
             "queries_run": self.queries_run,
             "sources_run": self.sources_run,
+            "hot_prefix": {
+                **self.exchange_stats.as_dict(),
+                "cold_every": self.cold_every,
+                "runners": list(self._prefix_info),
+            },
         }

@@ -16,8 +16,10 @@ the backends (backends.py):
   instead of a Python loop. Batches are padded to power-of-two buckets so
   a stream of ragged batch sizes hits a handful of compiled shapes.
 * **sharding** — `ShardedBackend` routes queries through `core.dist`
-  edge-partitioned kernels when a graph exceeds the per-device budget
-  (the placement decision is the policy's, see policy.py).
+  edge-partitioned kernels (all six: bfs/sssp/bc/pr/cc/ccsv) when a
+  graph exceeds the per-device budget; the placement decision — and the
+  `hot_prefix_fraction` governing the sharded exchange — is the
+  policy's, see policy.py.
 
 `BatchedExecutor.run` accepts either a `GraphHandle` from ``prepare``
 (routed to the handle's backend) or raw `GraphArrays` (legacy
@@ -64,8 +66,17 @@ class BatchedExecutor:
 
     # -------------------------------------------------------------- prepare
     def prepare(self, graph: Graph, backend: str = "single",
-                canonical_ids=None) -> GraphHandle:
-        """Upload one graph through the named backend; returns its handle."""
+                canonical_ids=None,
+                hot_prefix_fraction: float | None = None) -> GraphHandle:
+        """Upload one graph through the named backend; returns its handle.
+
+        ``hot_prefix_fraction`` only applies to the sharded backend (the
+        single-device path has no per-step exchange to thin out).
+        """
+        if backend == "sharded":
+            return self.sharded.prepare(
+                graph, canonical_ids=canonical_ids,
+                hot_prefix_fraction=hot_prefix_fraction)
         return self.backend(backend).prepare(graph,
                                              canonical_ids=canonical_ids)
 

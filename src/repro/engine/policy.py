@@ -47,6 +47,9 @@ class PolicyDecision:
     predicted_gain: float    # predicted fractional miss-rate reduction
     skew: float = 0.0        # probe composite the prediction was based on
     backend: str = "single"  # placement: engine.backends name
+    # sharded placement only: fraction of each shard's property slice
+    # all-gathered every step (None = full exchange every step)
+    hot_prefix_fraction: float | None = None
 
 
 @dataclasses.dataclass
@@ -74,6 +77,7 @@ class PolicyRecord:
             "graph_id": self.graph_id,
             "scheme": self.decision.scheme,
             "backend": self.decision.backend,
+            "hot_prefix_fraction": self.decision.hot_prefix_fraction,
             "kwargs": self.decision.kwargs,
             "reason": self.decision.reason,
             "skew": self.decision.skew,
@@ -93,7 +97,10 @@ class ReorderPolicy:
                  calibrator: StrengthCalibrator | None = None,
                  min_calibration_samples: int = 5,
                  override_margin: float = 0.05,
-                 device_budget_bytes: int | None = None):
+                 device_budget_bytes: int | None = None,
+                 hot_prefix_hub_mass_min: float = 0.5,
+                 hot_prefix_margin: float = 2.0,
+                 hot_prefix_bounds: tuple[float, float] = (0.05, 0.5)):
         self.min_queries = min_queries
         self.high_volume = high_volume
         self.min_gini = min_gini
@@ -104,6 +111,14 @@ class ReorderPolicy:
         # None = everything fits one device; a byte budget turns placement
         # on and routes oversized graphs to the sharded backend
         self.device_budget_bytes = device_budget_bytes
+        # sharded placement: hub mass above the threshold means a hub-
+        # packing reorder concentrates most property reads in the first
+        # ~hub_fraction of ids, so the per-step all-gather can be thinned
+        # to that prefix (margin x for the cold vertices interleaved by
+        # imperfect packing), clamped to the bounds
+        self.hot_prefix_hub_mass_min = hot_prefix_hub_mass_min
+        self.hot_prefix_margin = hot_prefix_margin
+        self.hot_prefix_bounds = hot_prefix_bounds
         self.history: list[PolicyRecord] = []
 
     # ------------------------------------------------------------- decide
@@ -145,6 +160,38 @@ class ReorderPolicy:
                     f"sharded across devices")
             return "sharded", note
         return "single", None
+
+    def _hot_prefix(self, probes: GraphProbes,
+                    scheme: str) -> tuple[float | None, str | None]:
+        """Derive the sharded hot-prefix fraction from the hub-mass probe.
+
+        Only meaningful when a hub-packing reorder concentrates the hot
+        working set toward low ids: the original/random layouts scatter
+        hubs across every shard's slice, so thinning the exchange would
+        just delay convergence for nothing. The exchange gathers the
+        first ``fraction`` of *each shard's* slice — under a
+        degree-monotone packing that is each shard's locally-hottest
+        range, while the absolute hubs sit on the first shard(s), so
+        this is a heuristic, not a coverage guarantee (covering the
+        global hub prefix exactly would need ``fraction ~ hub_fraction x
+        num_shards``; the realized coverage is what the backend's
+        ``prefix_hit_rate`` telemetry measures). ``margin x
+        hub_fraction`` clamped to the bounds is a serviceable default
+        either way: results stay exact regardless, only convergence
+        speed rides on the estimate.
+        """
+        if scheme in ("original", "random"):
+            return None, None
+        if probes.hub_mass < self.hot_prefix_hub_mass_min:
+            return None, None
+        lo, hi = self.hot_prefix_bounds
+        frac = round(min(max(probes.hub_fraction * self.hot_prefix_margin,
+                             lo), hi), 4)
+        note = (f"hot-prefix exchange: hub mass {probes.hub_mass:.2f} >= "
+                f"{self.hot_prefix_hub_mass_min} concentrated on "
+                f"{probes.hub_fraction:.1%} of vertices — gathering the "
+                f"first {frac:.1%} of each shard per step")
+        return frac, note
 
     def _calibrated_override(self, default: str, candidates: list[str],
                              probes: GraphProbes) -> tuple[str, str | None]:
@@ -213,9 +260,14 @@ class ReorderPolicy:
         backend, placement_note = self._placement(probes)
         if placement_note:
             reason = f"{reason}; {placement_note}"
+        hot_prefix = None
+        if backend == "sharded":
+            hot_prefix, prefix_note = self._hot_prefix(probes, scheme)
+            if prefix_note:
+                reason = f"{reason}; {prefix_note}"
         return PolicyDecision(scheme, self._scheme_kwargs(scheme, probes),
                               reason, self._predict_gain(probes, scheme),
-                              self._skew(probes), backend)
+                              self._skew(probes), backend, hot_prefix)
 
     # -------------------------------------------------------------- apply
     def reorder_fn(self, decision: PolicyDecision):

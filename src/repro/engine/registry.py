@@ -84,6 +84,7 @@ class GraphEntry:
     handle: object | None = None      # engine.backends.GraphHandle
     backend: str = "single"           # placement the policy chose
     bucket_shape: tuple | None = None  # padded (V_b, E_b) upload shape
+    hot_prefix_fraction: float | None = None  # sharded exchange thinning
     reorder_seconds: float = 0.0
     decision: object | None = None    # engine.policy.PolicyDecision
     ledger: object | None = None      # engine.session.AmortizationLedger

@@ -50,7 +50,10 @@ class AmortizationLedger:
     a launch. ``gain_discount`` (< 1 for sharded graphs) scales the gain
     before savings are booked — sharded reorders take proportionally more
     queries to amortize, which is exactly what the re-decision trigger
-    should see.
+    should see. The hot-prefix exchange shrinks exactly that collective
+    cost, so a sharded graph serving with ``hot_prefix_fraction`` gets a
+    *milder* discount: the base discount scaled by the fraction of
+    full-exchange bytes still paid (`EngineSession._gain_discount`).
     """
 
     reorder_seconds: float
@@ -161,21 +164,41 @@ class EngineSession:
             after = estimate_miss_rate(entry.served, cfg)
         # canonical_ids = inverse perm keeps SSSP edge weights identical to
         # the original layout, so served results match original-layout runs
-        entry.handle = self.executor.prepare(entry.served,
-                                             backend=decision.backend,
-                                             canonical_ids=inv)
+        entry.handle = self.executor.prepare(
+            entry.served, backend=decision.backend, canonical_ids=inv,
+            hot_prefix_fraction=decision.hot_prefix_fraction)
         entry.backend = decision.backend
         entry.bucket_shape = entry.handle.bucket
+        entry.hot_prefix_fraction = decision.hot_prefix_fraction
         entry.arrays = entry.handle.arrays  # None when served sharded
 
         rec = self.policy.record(entry.graph_id, decision, before, after,
                                  entry.reorder_seconds)
-        discount = (self.sharded_gain_discount
-                    if decision.backend == "sharded" else 1.0)
         entry.ledger = AmortizationLedger(entry.reorder_seconds,
                                           rec.realized_gain,
                                           backend=decision.backend,
-                                          gain_discount=discount)
+                                          gain_discount=self._gain_discount(
+                                              decision))
+
+    def _gain_discount(self, decision: PolicyDecision) -> float:
+        """Fraction of the miss-rate gain booked as wall savings.
+
+        Single-device serving books the full gain. Sharded serving books
+        ``sharded_gain_discount`` — collectives dilute locality savings —
+        but the hot-prefix exchange removes part of that collective cost:
+        with fraction f gathered per step and a full exchange every k
+        steps, roughly ``f + (1 - f)/k`` of the full-exchange bytes are
+        still paid, and only that share of the dilution applies.
+        """
+        if decision.backend != "sharded":
+            return 1.0
+        base = self.sharded_gain_discount
+        f = decision.hot_prefix_fraction
+        if not f:
+            return base
+        k = max(self.executor.sharded.cold_every, 1)
+        exchange_ratio = min(f + (1.0 - f) / k, 1.0)
+        return round(1.0 - (1.0 - base) * exchange_ratio, 4)
 
     # -------------------------------------------------------- re-decision
     def _maybe_redecide(self, entry: GraphEntry) -> dict | None:
@@ -212,7 +235,8 @@ class EngineSession:
                  f"{entry.ledger.realized_gain:.3f} <= 0 after "
                  f"{entry.ledger.queries_served} queries — it can never "
                  f"amortize, serving the original layout"),
-                0.0, new.skew, new.backend)
+                0.0, new.skew, new.backend,
+                None)  # original layout has no packed prefix to exploit
         if (new.scheme, new.kwargs) == (old.scheme, old.kwargs):
             # same choice at the new volume: refresh the hint so the
             # divergence trigger re-arms at redecide_factor x observed
@@ -278,6 +302,7 @@ class EngineSession:
                 gid: {
                     "scheme": e.decision.scheme if e.decision else None,
                     "backend": e.backend,
+                    "hot_prefix_fraction": e.hot_prefix_fraction,
                     "bucket_shape": e.bucket_shape,
                     "device_bytes": (e.handle.device_bytes
                                      if e.handle else None),

@@ -1,12 +1,22 @@
 """Shared fixtures: small graphs spanning the structural regimes the paper
-cares about (power-law community, RMAT skew, high-diameter grid, ring)."""
+cares about (power-law community, RMAT skew, high-diameter grid, ring) —
+plus the forced-4-device subprocess runner the distributed tests share
+(re-exported from benchmarks/common.py, the single copy of that recipe)."""
 from __future__ import annotations
+
+import os
+import sys
 
 import numpy as np
 import pytest
 
 from repro.core.csr import Graph, from_edges
 from repro.core.generators import powerlaw_community, rmat, road_grid, small_world
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:  # `pytest` without -m: repo root may be absent
+    sys.path.insert(0, _ROOT)
+from benchmarks.common import run_forced_four_devices  # noqa: E402,F401
 
 
 @pytest.fixture(scope="session")

@@ -11,82 +11,12 @@ from repro.algos.kernels import (bc, bc_single_source, bfs, cc_labelprop,
 from repro.core.lorder import lorder
 from repro.core.traversal import bfs_levels
 
-
-# --------------------------------------------------------------- oracles
-def pr_oracle(g, damping=0.85, iters=20, tol=1e-6):
-    n = g.num_vertices
-    r = np.full(n, 1.0 / n)
-    outdeg = np.maximum(g.out_degree.astype(np.float64), 1.0)
-    t = g.transpose
-    for _ in range(iters):
-        contrib = r / outdeg
-        summed = np.zeros(n)
-        np.add.at(summed, t.edge_src, contrib[t.indices])
-        dangling = r[g.out_degree == 0].sum()
-        r_new = (1 - damping) / n + damping * (summed + dangling / n)
-        if np.abs(r_new - r).sum() <= tol:
-            r = r_new
-            break
-        r = r_new
-    return r
-
-
-def cc_oracle(g):
-    """Union-find over symmetrized edges; labels = min vertex in component."""
-    parent = np.arange(g.num_vertices)
-
-    def find(x):
-        while parent[x] != x:
-            parent[x] = parent[parent[x]]
-            x = parent[x]
-        return x
-
-    for u, v in zip(g.edge_src, g.indices):
-        ru, rv = find(u), find(v)
-        if ru != rv:
-            parent[max(ru, rv)] = min(ru, rv)
-    return np.array([find(v) for v in range(g.num_vertices)])
-
-
-def sssp_oracle(g, weights, src):
-    n = g.num_vertices
-    INF = np.int64(2**31 - 1)
-    dist = np.full(n, INF)
-    dist[src] = 0
-    for _ in range(n):
-        du = dist[g.edge_src]
-        cand = np.where(du == INF, INF, du + weights)
-        new = dist.copy()
-        np.minimum.at(new, g.indices, cand)
-        if np.array_equal(new, dist):
-            break
-        dist = new
-    return dist
-
-
-def bc_oracle(g, sources):
-    """Brandes via per-level BFS (python reference)."""
-    n = g.num_vertices
-    total = np.zeros(n)
-    for s in sources:
-        depth = bfs_levels(g, s)
-        sigma = np.zeros(n)
-        sigma[s] = 1.0
-        maxl = depth.max()
-        src, dst = g.edge_src, g.indices
-        tree = (depth[dst] == depth[src] + 1) & (depth[src] >= 0)
-        for lvl in range(maxl):
-            m = tree & (depth[src] == lvl)
-            np.add.at(sigma, dst[m], sigma[src[m]])
-        delta = np.zeros(n)
-        for lvl in range(maxl - 1, -1, -1):
-            m = tree & (depth[src] == lvl)
-            contrib = sigma[src[m]] / np.maximum(sigma[dst[m]], 1e-30) \
-                * (1.0 + delta[dst[m]])
-            np.add.at(delta, src[m], contrib)
-        delta[s] = 0.0
-        total += delta
-    return total
+# The host oracles now live next to the reordering baselines
+# (core/baselines.py) so the cross-backend parity matrix shares them.
+from repro.core.baselines import (bc_baseline as bc_oracle,
+                                  cc_baseline as cc_oracle,
+                                  pagerank_baseline as pr_oracle,
+                                  sssp_baseline as sssp_oracle)
 
 
 # ----------------------------------------------------------------- tests

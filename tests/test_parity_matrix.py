@@ -1,0 +1,156 @@
+"""Cross-backend parity matrix: six kernels x serving configs vs numpy.
+
+Every served kernel (bfs, sssp, bc, pr, cc, ccsv) runs end-to-end
+through ``EngineSession.submit`` — policy reorder, id translation and
+all — under each serving configuration:
+
+* **exact** — single-device backend, bucketing off (exact CSR shapes);
+* **bucketed** — single-device backend, geometric shape buckets;
+* **sharded** — a tiny device budget forces the sharded backend (one
+  shard in the plain suite; every visible device when the process runs
+  under ``--xla_force_host_platform_device_count=4``).
+
+Results are checked against the host numpy baselines in
+`core/baselines.py` (bit-identical for the integer kernels, allclose for
+PR/BC, partition-equivalent for the component labelings whose ids live
+in served space) — and connected components are additionally checked
+**bit-identical across backends**, since every config picks the same
+reorder and therefore the same served label space.
+
+The genuinely distributed leg re-runs this whole module in a subprocess
+with 4 forced host devices (the XLA flag must be set before jax picks
+its backends), so the matrix is literally the same suite at both shard
+counts.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+from conftest import run_forced_four_devices
+from repro.algos.graph_arrays import to_device
+from repro.core.baselines import (bc_baseline, bfs_baseline, cc_baseline,
+                                  pagerank_baseline, sssp_baseline)
+from repro.engine import BatchedExecutor, EngineSession
+
+CONFIGS = ("exact", "bucketed", "sharded")
+GRAPHS = ("plc_graph", "tiny_graph")  # power-law + floor-bucket edge case
+SOURCES = {"plc_graph": np.array([5, 321, 1500]),
+           "tiny_graph": np.array([0, 3])}
+
+
+def _make_session(config: str) -> EngineSession:
+    # re-decision disabled: the matrix probes serving parity, not the
+    # online policy loop (tests/test_calibration.py covers that)
+    if config == "exact":
+        return EngineSession(executor=BatchedExecutor(bucketing=False),
+                             redecide_min_queries=10**6)
+    if config == "bucketed":
+        return EngineSession(redecide_min_queries=10**6)
+    return EngineSession(device_budget_bytes=1024,
+                         redecide_min_queries=10**6)
+
+
+@pytest.fixture(scope="module",
+                params=[(c, g) for g in GRAPHS for c in CONFIGS],
+                ids=[f"{g.split('_')[0]}-{c}"
+                     for g in GRAPHS for c in CONFIGS])
+def served(request):
+    """(config, graph_key, graph, session, graph_id) — registered once."""
+    config, graph_key = request.param
+    graph = request.getfixturevalue(graph_key)
+    session = _make_session(config)
+    gid = session.register(graph, graph_id=f"matrix-{config}-{graph_key}",
+                           expected_queries=256)
+    return config, graph_key, graph, session, gid
+
+
+# cc labels per (graph, config), for the cross-backend bit-identity check
+_CC_ACROSS: dict[tuple[str, str], np.ndarray] = {}
+
+
+def test_placement_matches_config(served):
+    config, _, _, session, gid = served
+    entry = session.registry.get(gid)
+    assert entry.backend == ("sharded" if config == "sharded" else "single")
+    if config == "sharded":
+        assert entry.ledger.gain_discount < 1.0
+
+
+def test_matrix_bfs(served):
+    _, graph_key, g, session, gid = served
+    srcs = SOURCES[graph_key]
+    out = np.asarray(session.submit(gid, "bfs", srcs))
+    assert out.shape == (len(srcs), g.num_vertices)
+    for i, s in enumerate(srcs):
+        np.testing.assert_array_equal(out[i], bfs_baseline(g, int(s)))
+
+
+def test_matrix_sssp(served):
+    _, graph_key, g, session, gid = served
+    srcs = SOURCES[graph_key]
+    out = np.asarray(session.submit(gid, "sssp", srcs), dtype=np.int64)
+    weights = np.asarray(to_device(g).weights)
+    for i, s in enumerate(srcs):
+        np.testing.assert_array_equal(out[i],
+                                      sssp_baseline(g, weights, int(s)))
+
+
+def test_matrix_bc(served):
+    _, graph_key, g, session, gid = served
+    srcs = SOURCES[graph_key]
+    out = np.asarray(session.submit(gid, "bc", srcs)).sum(axis=0)
+    np.testing.assert_allclose(out, bc_baseline(g, srcs),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_matrix_pr(served):
+    _, _, g, session, gid = served
+    out = np.asarray(session.submit(gid, "pr"))
+    np.testing.assert_allclose(out, pagerank_baseline(g),
+                               rtol=1e-4, atol=1e-7)
+
+
+def _assert_same_partition(a: np.ndarray, b: np.ndarray) -> None:
+    fwd: dict = {}
+    bwd: dict = {}
+    for x, y in zip(a.tolist(), b.tolist()):
+        assert fwd.setdefault(x, y) == y
+        assert bwd.setdefault(y, x) == x
+
+
+@pytest.mark.parametrize("kernel", ["cc", "ccsv"])
+def test_matrix_components(served, kernel):
+    config, graph_key, g, session, gid = served
+    out = np.asarray(session.submit(gid, kernel))
+    # label values live in served id space — compare partitions vs numpy
+    _assert_same_partition(out, cc_baseline(g))
+    if kernel == "cc":
+        _CC_ACROSS[(graph_key, config)] = out
+
+
+def test_matrix_cc_bit_identical_across_backends(served):
+    """Same reorder decision => same served label space => the sharded
+    min-label fixed point must equal the single-device labels bitwise."""
+    config, graph_key, _, session, gid = served
+    if (graph_key, config) not in _CC_ACROSS:
+        # selective runs (-k) may skip test_matrix_components: collect here
+        _CC_ACROSS[(graph_key, config)] = np.asarray(
+            session.submit(gid, "cc"))
+    mine = _CC_ACROSS[(graph_key, config)]
+    for (gk, other), labels in _CC_ACROSS.items():
+        if gk == graph_key and other != config:
+            np.testing.assert_array_equal(mine, labels)
+
+
+def test_matrix_four_forced_devices():
+    """Re-run this whole module on 4 forced host devices: the sharded
+    config becomes a genuine 4-shard mesh (with the policy's hot-prefix
+    exchange active on the power-law graph) against the same baselines."""
+    res = run_forced_four_devices(
+        ["-m", "pytest", "-q", os.path.abspath(__file__),
+         "-k", "not four_forced"], timeout=900)
+    assert res.returncode == 0, \
+        f"stdout={res.stdout[-4000:]}\nstderr={res.stderr[-2000:]}"
