@@ -1,6 +1,6 @@
 """Engine harness — policy decisions, amortization, and the closed loop.
 
-Six phases:
+Seven phases:
 
 1. **Decisions + amortization** — for each dataset: register with the
    serving engine (policy decides a scheme from probes + volume hint),
@@ -29,6 +29,11 @@ Six phases:
    the sharded traversals with and without ``hot_prefix_fraction`` and
    report per-step exchanged bytes, the savings fraction, and the static
    prefix hit rate — results must stay bit-identical either way.
+7. **Scheduler throughput** — a 16-request multi-source burst on one
+   graph served two ways: sequential blocking ``submit`` (one device
+   launch per request) vs the request plane (``enqueue`` + ``drain``,
+   requests coalesced into shared vmapped launches). Reports device
+   launches and wall per query for both, with per-request parity.
 
 Emits benchmarks/results/engine.json.
 """
@@ -334,6 +339,64 @@ def _phase_hot_prefix(scale):
     return out
 
 
+def _phase_scheduler(scale, requests: int = 16, sources_each: int = 2):
+    """Request-plane throughput: the same multi-source burst served
+    sequentially (blocking submit, one launch per request) vs coalesced
+    (enqueue + drain, shared vmapped launches)."""
+    import time
+
+    from repro.core.generators import powerlaw_community
+    from repro.engine import EngineSession
+
+    n = max(2000, int(20_000 * scale))
+    g = powerlaw_community(n, avg_degree=10.0, seed=41, name="front")
+    rng = np.random.default_rng(17)
+    bursts = [rng.integers(0, n, size=sources_each) for _ in range(requests)]
+
+    seq = EngineSession(redecide_min_queries=10**6)
+    sid = seq.register(g, graph_id="seq", expected_queries=256)
+    seq.submit(sid, "bfs", bursts[0])            # warm the per-request shape
+    launches0 = seq.executor.queries_run
+    t0 = time.perf_counter()
+    seq_outs = [np.asarray(seq.submit(sid, "bfs", b)) for b in bursts]
+    seq_wall = time.perf_counter() - t0
+    seq_launches = seq.executor.queries_run - launches0
+
+    bat = EngineSession(redecide_min_queries=10**6)
+    bid = bat.register(g, graph_id="bat", expected_queries=256)
+    bat.submit(bid, "bfs", np.concatenate(bursts))  # warm the coalesced shape
+    launches0 = bat.executor.queries_run
+    t0 = time.perf_counter()
+    futs = [bat.enqueue(bid, "bfs", b) for b in bursts]
+    bat.drain()
+    bat_wall = time.perf_counter() - t0
+    bat_launches = bat.executor.queries_run - launches0
+
+    identical = all(np.array_equal(np.asarray(f.result()), want)
+                    for f, want in zip(futs, seq_outs))
+    reduction = seq_launches / max(bat_launches, 1)
+    out = {
+        "requests": requests,
+        "sources_each": sources_each,
+        "launches_sequential": seq_launches,
+        "launches_coalesced": bat_launches,
+        "launch_reduction_x": round(reduction, 2),
+        "wall_per_query_sequential_ms": round(seq_wall / requests * 1e3, 3),
+        "wall_per_query_coalesced_ms": round(bat_wall / requests * 1e3, 3),
+        "wall_speedup_x": round(seq_wall / max(bat_wall, 1e-9), 2),
+        "bit_identical": identical,
+        "scheduler": bat.scheduler.telemetry(),
+    }
+    print(f"[engine] scheduler: {requests}-request burst -> "
+          f"{seq_launches} launches sequential vs {bat_launches} coalesced "
+          f"({reduction:.0f}x fewer), "
+          f"{out['wall_per_query_sequential_ms']:.1f}ms -> "
+          f"{out['wall_per_query_coalesced_ms']:.1f}ms per query "
+          f"({out['wall_speedup_x']:.1f}x), bit-identical={identical}",
+          flush=True)
+    return out
+
+
 def run(scale: float = 0.5, batch: int = 8, repeats: int = 5) -> list[dict]:
     from repro.core.generators import road_grid
     from repro.engine import EngineSession
@@ -350,6 +413,7 @@ def run(scale: float = 0.5, batch: int = 8, repeats: int = 5) -> list[dict]:
     bucketing = _phase_bucketing(scale)
     sharded = _phase_sharded(scale)
     hot_prefix = _phase_hot_prefix(scale)
+    scheduler = _phase_scheduler(scale)
 
     out = {
         "rows": rows,
@@ -358,6 +422,7 @@ def run(scale: float = 0.5, batch: int = 8, repeats: int = 5) -> list[dict]:
         "bucketing": bucketing,
         "sharded": sharded,
         "hot_prefix": hot_prefix,
+        "scheduler": scheduler,
         "calibration": session.policy.calibrator.as_dict(),
         "executor": session.executor.telemetry(),
     }

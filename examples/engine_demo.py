@@ -10,10 +10,13 @@ Registers two structurally opposite graphs with the serving engine:
 Then submits batched multi-source BFS / SSSP / BC queries through the
 session and verifies the answers match the single-source kernels on the
 original layout, prints the telemetry (compile-cache hits, policy
-predicted-vs-realized gains, amortization ledger), and finally shows the
-closed loop: realized outcomes calibrate the per-scheme strengths, and a
-graph registered with a misleading volume hint is re-decided — and
-re-reordered in place — once its realized traffic diverges.
+predicted-vs-realized gains, amortization ledger), shows the closed
+loop: realized outcomes calibrate the per-scheme strengths, and a graph
+registered with a misleading volume hint is re-decided — and re-reordered
+in place — once its realized traffic diverges. Finally it drives the
+**request plane** (docs/scheduler.md): concurrent queries enqueued as
+futures coalesce into shared device launches at a flush boundary —
+identical answers, a fraction of the launches.
 
 Run:  PYTHONPATH=src python examples/engine_demo.py
 """
@@ -111,6 +114,37 @@ def main():
     ref = np.asarray(K.bfs(to_device(g_burst), jnp.int32(s)))
     assert np.array_equal(depth[0], ref)
     print("   post-re-decision parity OK")
+
+    print("== 5. request plane: enqueue futures, coalesce at the flush")
+    gid = ids[0]  # the power-law graph
+    launches_before = session.executor.queries_run
+    # a burst of concurrent queries: 6 multi-source requests + 3 callers
+    # all wanting PageRank; nothing launches until the flush boundary
+    futs = [session.enqueue(gid, "bfs",
+                            rng.integers(0, g_pl.num_vertices, size=3),
+                            priority=i % 2)
+            for i in range(6)]
+    futs += [session.enqueue(gid, "pr") for _ in range(3)]
+    assert not futs[0].done()
+    served = session.flush()
+    launches = session.executor.queries_run - launches_before
+    print(f"   {served} requests served by {launches} device launches "
+          f"(6 bfs coalesced into one vmapped batch, 3 pr deduplicated)")
+    ga_pl = to_device(g_pl)
+    for f in futs[:6]:
+        srcs = f.request.sources
+        for row, s in zip(f.result(), srcs):
+            assert np.array_equal(
+                row, np.asarray(K.bfs(ga_pl, jnp.int32(s))))
+    t0 = futs[0].telemetry
+    print(f"   per-request telemetry: launch shared with "
+          f"{t0['coalesced_with']} others, generation {t0['generation']}, "
+          f"wall share {t0['wall_share_seconds'] * 1e3:.1f}ms")
+    sched = session.scheduler.telemetry()
+    print(f"   scheduler: {sched['requests_served']} served / "
+          f"{sched['launches']} launches, "
+          f"{sched['dedup_hits']} dedup hit(s)")
+    assert launches == 2 and sched["dedup_hits"] >= 2
 
 
 if __name__ == "__main__":

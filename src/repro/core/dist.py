@@ -140,6 +140,19 @@ class ExchangeStats:
         self.bytes_hot += nbytes
         self.bytes_full_equivalent += full_nbytes
 
+    def snapshot(self) -> tuple:
+        """Counter tuple for per-run attribution (see ``delta``)."""
+        return (self.steps_full, self.steps_hot, self.bytes_full,
+                self.bytes_hot, self.bytes_full_equivalent)
+
+    def delta(self, since: tuple) -> "ExchangeStats":
+        """Stats accumulated since ``snapshot()`` — the exchange cost of
+        exactly one runner invocation when runs are serial, which is how
+        the scheduler attributes collective bytes to individual requests
+        instead of only the backend-level aggregate."""
+        now = self.snapshot()
+        return ExchangeStats(*(a - b for a, b in zip(now, since)))
+
     @property
     def steps(self) -> int:
         return self.steps_full + self.steps_hot
@@ -160,6 +173,7 @@ class ExchangeStats:
 
     def as_dict(self) -> dict:
         return {
+            "steps": self.steps,
             "steps_full": self.steps_full,
             "steps_hot": self.steps_hot,
             "bytes_full": self.bytes_full,

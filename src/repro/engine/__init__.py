@@ -4,10 +4,17 @@ Turns the one-shot reproduction benchmarks into a serving system: a
 registry of probed graphs, an adaptive reorder policy that decides *when*
 and *how* to reorder from cheap structural probes plus expected query
 volume, a compile-cached batched executor, and a session front-end with
-an amortization ledger. The loop is closed: realized outcomes calibrate
-the policy's per-scheme strengths (calibration.py), and the session
-re-decides — re-reordering in place — when realized traffic diverges
-from the registration hint or a reorder provably cannot amortize.
+an amortization ledger. The front door is a request plane
+(scheduler.py, docs/scheduler.md): ``enqueue`` returns a `QueryFuture`,
+and a micro-batch scheduler coalesces concurrent multi-source requests
+into shared vmapped launches, dedupes global-kernel requests, and drains
+in priority/deadline order — ``submit`` survives as enqueue + flush
+sugar. The loop is closed: realized outcomes calibrate the policy's
+per-scheme strengths (calibration.py), the scheduler's observed batch
+shapes feed placement (policy.py), and the session re-decides —
+re-reordering in place at flush boundaries — when realized traffic
+diverges from the registration hint or a reorder provably cannot
+amortize.
 """
 from .backends import (SHARDED_KERNELS, ExecutionBackend, GraphHandle,
                        ShardedBackend, SingleDeviceBackend, bucket_dims,
@@ -16,14 +23,16 @@ from .calibration import DEFAULT_PRIORS, SchemeStats, StrengthCalibrator
 from .executor import BatchedExecutor
 from .policy import PolicyDecision, PolicyRecord, ReorderPolicy
 from .registry import GraphProbes, GraphRegistry, probe_graph
+from .scheduler import (MicroBatchScheduler, QueryFuture, Request,
+                        canonical_component_labels)
 from .session import AmortizationLedger, EngineSession
 
 __all__ = [
     "AmortizationLedger", "BatchedExecutor", "DEFAULT_PRIORS",
     "EngineSession", "ExecutionBackend", "GraphHandle", "GraphProbes",
-    "GraphRegistry", "PolicyDecision", "PolicyRecord", "ReorderPolicy",
+    "GraphRegistry", "MicroBatchScheduler", "PolicyDecision",
+    "PolicyRecord", "QueryFuture", "ReorderPolicy", "Request",
     "SHARDED_KERNELS", "SchemeStats", "ShardedBackend",
-    "SingleDeviceBackend",
-    "StrengthCalibrator", "bucket_dims", "estimate_device_bytes",
-    "probe_graph",
+    "SingleDeviceBackend", "StrengthCalibrator", "bucket_dims",
+    "canonical_component_labels", "estimate_device_bytes", "probe_graph",
 ]

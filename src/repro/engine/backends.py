@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from collections import OrderedDict
 from typing import Protocol, runtime_checkable
 
 import numpy as np
@@ -116,14 +117,26 @@ def bucket_dims(num_vertices: int, num_edges: int, growth: float = 2.0,
     return v_b, e_b
 
 
-def estimate_device_bytes(num_vertices: int, num_edges: int) -> int:
-    """Device footprint of one `GraphArrays` upload (placement input).
+def estimate_device_bytes(num_vertices: int, num_edges: int,
+                          batch_sources: int = 0) -> int:
+    """Device footprint of serving one graph (the placement input).
 
-    int32 fields: 2x indptr (V+1), 5x edge-sized (indices, src, t_indices,
-    t_dst, weights), 2x vertex-sized degrees; plus 1-byte bool masks.
+    CSR upload: int32 fields — 2x indptr (V+1), 5x edge-sized (indices,
+    src, t_indices, t_dst, weights), 2x vertex-sized degrees — plus
+    1-byte bool masks.
+
+    ``batch_sources`` adds the **query state** (placement v2): a
+    multi-source launch of S sources holds an (S, V) int32 property
+    matrix plus a same-shape relaxation/frontier buffer alive on the
+    device, so at realistic batch sizes the working set is the CSR *and*
+    ~8·S·V bytes. The policy feeds S from the micro-batch scheduler's
+    observed launch sizes (`ReorderPolicy.observe_batch_sources`), so a
+    graph that fits alone but not under its real traffic's batches is
+    placed sharded.
     """
     return (4 * (2 * (num_vertices + 1) + 5 * num_edges + 2 * num_vertices)
-            + num_vertices + num_edges)
+            + num_vertices + num_edges
+            + 8 * batch_sources * num_vertices)
 
 
 # ------------------------------------------------------------------- handle
@@ -165,19 +178,35 @@ class ExecutionBackend(Protocol):
 
 # ------------------------------------------------------------- single device
 class SingleDeviceBackend:
-    """Today's path plus shape bucketing: one device, shared compiles."""
+    """Today's path plus shape bucketing: one device, shared compiles.
+
+    The compiled-executable cache is **bounded**: with
+    ``max_cached_executables`` set, entries are evicted LRU once the cap
+    is hit. Each cache entry owns its own ``jax.jit`` wrapper (not the
+    module-level jitted kernel), so evicting an entry genuinely releases
+    its compiled executables — a long-lived session serving an unbounded
+    stream of shapes stays bounded instead of accumulating one executable
+    per (kernel, bucket) forever (the ROADMAP's eviction item). Evictions
+    are counted in telemetry; an evicted shape that returns simply
+    recompiles (a counted miss).
+    """
 
     name = "single"
 
     def __init__(self, bucketing: bool = True, growth: float = 2.0,
-                 v_floor: int = 256, e_floor: int = 1024):
+                 v_floor: int = 256, e_floor: int = 1024,
+                 max_cached_executables: int | None = None):
+        if max_cached_executables is not None and max_cached_executables < 1:
+            raise ValueError("max_cached_executables must be >= 1 or None")
         self.bucketing = bucketing
         self.growth = growth
         self.v_floor = v_floor
         self.e_floor = e_floor
-        self._cache: dict[tuple, object] = {}
+        self.max_cached_executables = max_cached_executables
+        self._cache: OrderedDict[tuple, object] = OrderedDict()
         self.cache_hits = 0
         self.cache_misses = 0
+        self.cache_evictions = 0
         self.queries_run = 0
         self.sources_run = 0
         self.graphs_prepared = 0
@@ -204,12 +233,22 @@ class SingleDeviceBackend:
         # even at equal shapes — the telemetry key must not conflate them
         key = (kernel, ga.num_vertices, ga.num_edges,
                ga.vertex_valid is not None)
-        if key in self._cache:
+        cached = self._cache.get(key)
+        if cached is not None:
             self.cache_hits += 1
-        else:
-            self.cache_misses += 1
-            self._cache[key] = fn
-        return fn
+            self._cache.move_to_end(key)     # LRU: refresh recency
+            return cached
+        self.cache_misses += 1
+        # a per-key jit wrapper owns this key's executables, so LRU
+        # eviction below actually frees them (the module-level jitted
+        # kernel would pin every shape it ever compiled)
+        cached = jax.jit(fn)
+        self._cache[key] = cached
+        if (self.max_cached_executables is not None
+                and len(self._cache) > self.max_cached_executables):
+            self._cache.popitem(last=False)  # least recently used
+            self.cache_evictions += 1
+        return cached
 
     def run_arrays(self, ga: GraphArrays, kernel: str,
                    sources=None) -> jnp.ndarray:
@@ -237,6 +276,8 @@ class SingleDeviceBackend:
         return {
             "compile_cache_hits": self.cache_hits,
             "compile_cache_misses": self.cache_misses,
+            "cache_evictions": self.cache_evictions,
+            "max_cached_executables": self.max_cached_executables,
             "cached_keys": sorted(str(k) for k in self._cache),
             "queries_run": self.queries_run,
             "sources_run": self.sources_run,
@@ -368,6 +409,10 @@ class ShardedBackend:
         self.graphs_prepared = 0
         from ..core.dist import ExchangeStats
         self.exchange_stats = ExchangeStats()
+        # exchange delta of the most recent run(): runs are serial, so a
+        # snapshot/delta pair attributes collective bytes per query — the
+        # scheduler copies this into each request's telemetry
+        self.last_run_exchange: dict | None = None
         self._prefix_info: list[dict] = []
 
     def prepare(self, graph: Graph,
@@ -415,12 +460,16 @@ class ShardedBackend:
                 "prefix_hit_rate": round(runner.prefix_hit_rate, 4),
             })
         self.queries_run += 1
+        before = self.exchange_stats.snapshot()
         if kernel in GLOBAL:
-            return jax.block_until_ready(runner())[:handle.num_vertices]
-        padded, real = pad_sources(sources, kernel)
-        self.sources_run += real
-        out = runner(jnp.asarray(padded))
-        return jax.block_until_ready(out)[:real, :handle.num_vertices]
+            out = jax.block_until_ready(runner())[:handle.num_vertices]
+        else:
+            padded, real = pad_sources(sources, kernel)
+            self.sources_run += real
+            out = jax.block_until_ready(
+                runner(jnp.asarray(padded)))[:real, :handle.num_vertices]
+        self.last_run_exchange = self.exchange_stats.delta(before).as_dict()
+        return out
 
     def telemetry(self) -> dict:
         return {

@@ -45,8 +45,11 @@ class BatchedExecutor:
     """Runs kernels against prepared graph handles through their backend."""
 
     def __init__(self, single: SingleDeviceBackend | None = None,
-                 num_shards: int | None = None, bucketing: bool = True):
-        self.single = single or SingleDeviceBackend(bucketing=bucketing)
+                 num_shards: int | None = None, bucketing: bool = True,
+                 max_cached_executables: int | None = None):
+        self.single = single or SingleDeviceBackend(
+            bucketing=bucketing,
+            max_cached_executables=max_cached_executables)
         self._num_shards = num_shards
         self._sharded: ShardedBackend | None = None
 

@@ -119,6 +119,13 @@ class ReorderPolicy:
         self.hot_prefix_hub_mass_min = hot_prefix_hub_mass_min
         self.hot_prefix_margin = hot_prefix_margin
         self.hot_prefix_bounds = hot_prefix_bounds
+        # placement v2: the S term of estimate_device_bytes. Starts at 1
+        # (a lone query's state) and tracks the micro-batch scheduler's
+        # *observed* coalesced launch sizes via an EWMA, so re-decisions
+        # place graphs against the batch shapes traffic actually produces
+        self.batch_sources_ewma = 1.0
+        self.batch_sources_decay = 0.2
+        self.batches_observed = 0
         self.history: list[PolicyRecord] = []
 
     # ------------------------------------------------------------- decide
@@ -137,8 +144,32 @@ class ReorderPolicy:
             return {"kappa": max(1, (probes.diameter + 1) // 2)}
         return {}
 
+    def observe_batch_sources(self, num_sources: int) -> None:
+        """Feed one coalesced launch's source count into the S estimate.
+
+        Called by the micro-batch scheduler after every multi-source
+        launch; `_placement` sizes query state from the EWMA of these
+        observations, closing the loop between the request plane's real
+        batch shapes and where graphs are placed (ROADMAP placement v2).
+        """
+        n = max(int(num_sources), 1)
+        if self.batches_observed == 0:
+            self.batch_sources_ewma = float(n)
+        else:
+            d = self.batch_sources_decay
+            self.batch_sources_ewma = ((1.0 - d) * self.batch_sources_ewma
+                                       + d * n)
+        self.batches_observed += 1
+
+    @property
+    def batch_sources_hint(self) -> int:
+        """S for placement: the vmapped launch the executor would build
+        for the typical observed batch (its power-of-two source bucket)."""
+        from .backends import source_bucket
+        return source_bucket(max(int(round(self.batch_sources_ewma)), 1))
+
     def _placement(self, probes: GraphProbes) -> tuple[str, str | None]:
-        """Pick the execution backend from the CSR footprint vs budget.
+        """Pick the execution backend from the working set vs budget.
 
         Placement changes the amortization math, not just the launch
         path: a sharded traversal pays an all-gather per step, so the
@@ -147,17 +178,24 @@ class ReorderPolicy:
         """
         if self.device_budget_bytes is None:
             return "single", None
-        # what the single-device backend would actually upload: the graph
-        # padded to its geometric bucket (default bucketing params), not
-        # the raw (V, E) footprint — a graph just under budget raw can be
-        # nearly growth x over it once padded
-        need = estimate_device_bytes(
-            *bucket_dims(probes.num_vertices, probes.num_edges))
+        # what the single-device backend would actually hold live: the
+        # graph padded to its geometric bucket (default bucketing params,
+        # not the raw (V, E) footprint — a graph just under budget raw
+        # can be nearly growth x over it once padded) plus the (S, V)
+        # query state of the typical observed micro-batch
+        v_b, e_b = bucket_dims(probes.num_vertices, probes.num_edges)
+        s = self.batch_sources_hint
+        csr_only = estimate_device_bytes(v_b, e_b)
+        need = estimate_device_bytes(v_b, e_b, batch_sources=s)
         if need > self.device_budget_bytes:
-            note = (f"placement: CSR working set ~{need / 1e6:.1f} MB "
-                    f"exceeds device budget "
+            batch_note = ""
+            if csr_only <= self.device_budget_bytes:
+                batch_note = (f" (the CSR alone fits; S={s} observed "
+                              f"batch state tips it over)")
+            note = (f"placement: working set ~{need / 1e6:.1f} MB "
+                    f"(CSR + S={s} query state) exceeds device budget "
                     f"{self.device_budget_bytes / 1e6:.1f} MB — serving "
-                    f"sharded across devices")
+                    f"sharded across devices{batch_note}")
             return "sharded", note
         return "single", None
 

@@ -90,6 +90,11 @@ class GraphEntry:
     ledger: object | None = None      # engine.session.AmortizationLedger
     queries_observed: int = 0         # realized volume, survives re-decisions
     redecisions: int = 0
+    # layout generation: bumped every time a policy decision is (re-)applied.
+    # The scheduler translates each request through the generation current
+    # at launch time and stamps it into the request's telemetry, so layout
+    # replacements are observable and never straddle an in-flight future.
+    generation: int = 0
 
 
 class GraphRegistry:

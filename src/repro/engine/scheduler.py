@@ -1,0 +1,399 @@
+"""Request plane: futures + micro-batch scheduling over the serving engine.
+
+The paper's economic argument is *amortization* — a reorder pays off only
+across many traversals — yet a blocking one-caller ``submit`` launches one
+device program per call, so concurrent traffic can never share a vmapped
+launch and the policy never observes real batch shapes. This module turns
+the front door into a request plane:
+
+* ``EngineSession.enqueue(...)`` returns a `QueryFuture` immediately;
+  nothing touches a device until a **flush boundary**.
+* `MicroBatchScheduler` queues requests per ``(graph_id, kernel)`` and, at
+  ``flush()``/``drain()``:
+
+  - **coalesces** pending multi-source requests (bfs/sssp/bc) into one
+    vmapped launch whose concatenated sources fill a power-of-two
+    `source_bucket`, then slices each request's rows back out of the
+    ``(S, V)`` result — N requests, one device program;
+  - **deduplicates** concurrent global-kernel requests (pr/cc/ccsv) into
+    a single run fanned out to every waiter — the result is
+    source-independent, so running it twice is pure waste;
+  - drains queues in **priority / deadline order** (higher ``priority``
+    first, then earlier absolute deadline, then FIFO), so a latency-bound
+    request is never stuck behind a bulk scan that arrived first.
+
+* **generations** — every (re-)applied policy decision bumps the graph
+  entry's ``generation``; a request's sources are translated through the
+  layout *at launch time* and its result translated back before the
+  flush-boundary re-decision check runs, so an in-flight future is never
+  served half from a layout that was just replaced. Re-decision moves
+  from per-submit to per-flush: one check per graph per flush, after all
+  of its pending requests were served.
+
+* **telemetry** — every future carries per-request serving facts: the
+  launch it rode, how many requests shared it, its wall share, the
+  generation that served it, whether its deadline was met, and (sharded
+  placements) the per-run `ExchangeStats` delta from ``core/dist.py``.
+
+``EngineSession.submit`` is reimplemented as enqueue + flush sugar, so
+the blocking API is exactly one request riding a one-element batch —
+bit-identical results, same id translation, same ledger accounting.
+docs/scheduler.md documents the lifecycle and the migration path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from .backends import GLOBAL, MULTI_SOURCE, build_kernel, source_bucket
+
+if TYPE_CHECKING:  # import cycle: session builds the scheduler
+    from .session import EngineSession
+
+# component-label kernels whose *values* (not just positions) are vertex
+# ids and must be canonicalized back to original id space at the boundary
+LABEL_KERNELS = ("cc", "ccsv")
+
+
+def canonical_component_labels(labels: np.ndarray) -> np.ndarray:
+    """Relabel component ids to the **minimum original vertex id** of each
+    component.
+
+    ``labels[v]`` must be a consistent per-component representative (any
+    id space — the engine's served layout uses served ids). The output is
+    layout-independent: bit-identical to `core.baselines.cc_baseline`
+    whatever permutation the graph was served under, which is what lets
+    the parity matrix demand cross-backend bit-identity for cc/ccsv.
+    """
+    labels = np.asarray(labels)
+    n = labels.shape[-1]
+    flat = labels.reshape(-1, n).astype(np.int64, copy=False)
+    out = np.empty_like(flat)
+    for i, row in enumerate(flat):
+        rep_min = np.full(int(row.max()) + 1, n, dtype=np.int64)
+        np.minimum.at(rep_min, row, np.arange(n, dtype=np.int64))
+        out[i] = rep_min[row]
+    return out.reshape(labels.shape)
+
+
+@dataclasses.dataclass
+class Request:
+    """One enqueued query: what to run, how urgently, and for whom."""
+
+    seq: int                       # FIFO tiebreak, assigned at enqueue
+    graph_id: str
+    kernel: str
+    sources: np.ndarray | None     # original-id space; None for GLOBAL
+    priority: int                  # higher drains first
+    deadline: float | None         # absolute perf_counter() time, or None
+    enqueued_at: float
+    future: "QueryFuture"
+    generation: int | None = None  # layout generation that served it
+
+    @property
+    def num_sources(self) -> int:
+        return 0 if self.sources is None else int(self.sources.size)
+
+    def order_key(self) -> tuple:
+        """Drain order: priority desc, earliest deadline, FIFO."""
+        return (-self.priority,
+                self.deadline if self.deadline is not None else float("inf"),
+                self.seq)
+
+
+class QueryFuture:
+    """Handle to a pending (or served) request.
+
+    ``result()`` is the blocking read: if the request has not been served
+    yet it flushes the owning scheduler for this request's graph first,
+    so a lone ``enqueue(...).result()`` behaves exactly like the old
+    blocking ``submit``. ``telemetry`` is populated at serve time (see
+    `MicroBatchScheduler._account`).
+    """
+
+    def __init__(self, scheduler: "MicroBatchScheduler", request: Request):
+        self._scheduler = scheduler
+        self._result: np.ndarray | None = None
+        self._exception: BaseException | None = None
+        self._done = False
+        self.request = request
+        self.telemetry: dict = {}
+
+    # ------------------------------------------------------------ protocol
+    def done(self) -> bool:
+        return self._done
+
+    def result(self) -> np.ndarray:
+        if not self._done:
+            self._scheduler.flush(self.request.graph_id)
+        if not self._done:  # defensive: flush must have served us
+            raise RuntimeError(
+                f"flush did not serve request {self.request.seq} "
+                f"({self.request.graph_id}/{self.request.kernel})")
+        if self._exception is not None:
+            raise self._exception
+        return self._result
+
+    def exception(self) -> BaseException | None:
+        """The launch failure, if any (None while pending or on success)."""
+        return self._exception
+
+    # ------------------------------------------------------------ internal
+    def _set_result(self, value: np.ndarray) -> None:
+        self._result = value
+        self._done = True
+
+    def _set_exception(self, exc: BaseException) -> None:
+        self._exception = exc
+        self._done = True
+
+
+class MicroBatchScheduler:
+    """Per-(graph, kernel) request queues drained as micro-batches.
+
+    One scheduler fronts one `EngineSession`; the session owns the
+    registry/policy/executor and exposes the launch internals the
+    scheduler drives (`EngineSession._launch` / ``_finalize`` /
+    ``_maybe_redecide``). ``max_batch_sources`` caps how many concatenated
+    sources one coalesced launch may carry (None = coalesce everything
+    pending into a single launch; the executor still pads the batch to
+    its power-of-two `source_bucket`).
+    """
+
+    def __init__(self, session: "EngineSession",
+                 max_batch_sources: int | None = None):
+        if max_batch_sources is not None and max_batch_sources < 1:
+            raise ValueError("max_batch_sources must be >= 1 or None")
+        self.session = session
+        self.max_batch_sources = max_batch_sources
+        self._queues: dict[tuple[str, str], list[Request]] = {}
+        self._seq = itertools.count()
+        # counters: the coalescing story in numbers
+        self.requests_enqueued = 0
+        self.requests_served = 0
+        self.launches = 0
+        self.coalesced_requests = 0   # requests that shared a launch
+        self.dedup_hits = 0           # global requests served without a run
+        self.flushes = 0
+        self.deadlines_missed = 0
+
+    # ------------------------------------------------------------- enqueue
+    def enqueue(self, graph_id: str, kernel: str, sources=None,
+                priority: int = 0,
+                deadline_seconds: float | None = None) -> QueryFuture:
+        """Queue one request; returns its future. Validation is eager —
+        unknown kernel/graph and empty source batches raise *here*, not at
+        flush time where they would poison a coalesced batch."""
+        build_kernel(kernel)                    # ValueError on unknown
+        entry = self.session.registry.get(graph_id)  # KeyError on unknown
+        srcs = None
+        if kernel in MULTI_SOURCE:
+            srcs = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+            if srcs.size == 0:
+                raise ValueError(f"{kernel} needs at least one source")
+            n = entry.graph.num_vertices
+            if int(srcs.min()) < 0 or int(srcs.max()) >= n:
+                # out-of-range ids must fail *this* caller now — at launch
+                # time they would poison every request coalesced alongside
+                raise ValueError(
+                    f"{kernel} sources must be in [0, {n}); got "
+                    f"[{int(srcs.min())}, {int(srcs.max())}]")
+        now = time.perf_counter()
+        req = Request(
+            seq=next(self._seq), graph_id=graph_id, kernel=kernel,
+            sources=srcs, priority=priority,
+            deadline=(now + deadline_seconds
+                      if deadline_seconds is not None else None),
+            enqueued_at=now, future=None)  # type: ignore[arg-type]
+        req.future = QueryFuture(self, req)
+        self._queues.setdefault((graph_id, kernel), []).append(req)
+        self.requests_enqueued += 1
+        return req.future
+
+    def pending(self, graph_id: str | None = None) -> int:
+        return sum(len(reqs) for (gid, _), reqs in self._queues.items()
+                   if graph_id is None or gid == graph_id)
+
+    # --------------------------------------------------------------- flush
+    def flush(self, graph_id: str | None = None) -> int:
+        """Serve everything currently pending (for one graph, or all).
+
+        Queues drain in priority/deadline order; each graph gets exactly
+        one re-decision check *after* all of its pending requests were
+        served — the flush boundary — so no in-flight future straddles a
+        layout replacement.
+        """
+        graphs: list[str] = []
+        for (gid, _), reqs in self._queues.items():
+            if reqs and (graph_id is None or gid == graph_id):
+                if gid not in graphs:
+                    graphs.append(gid)
+        served = 0
+        self.flushes += 1
+        for gid in graphs:
+            served += self._flush_graph(gid)
+        return served
+
+    def drain(self) -> int:
+        """Flush until no request is pending anywhere (lifecycle close)."""
+        served = 0
+        while self.pending():
+            served += self.flush()
+        return served
+
+    # ------------------------------------------------------ flush internals
+    def _take_queues(self, graph_id: str) -> list[tuple[str, list[Request]]]:
+        """Pop this graph's non-empty queues, ordered by their most urgent
+        request (so a high-priority sssp drains before a bulk bfs)."""
+        taken = []
+        for (gid, kernel), reqs in list(self._queues.items()):
+            if gid == graph_id and reqs:
+                taken.append((kernel, reqs))
+                del self._queues[(gid, kernel)]
+        taken.sort(key=lambda kv: min(r.order_key() for r in kv[1]))
+        return taken
+
+    def _flush_graph(self, graph_id: str) -> int:
+        session = self.session
+        entry = session.registry.get(graph_id)
+        served = 0
+        taken = self._take_queues(graph_id)
+        try:
+            for kernel, reqs in taken:
+                reqs.sort(key=Request.order_key)
+                if kernel in GLOBAL:
+                    self._serve_global(entry, kernel, reqs)
+                else:
+                    for chunk in self._chunks(reqs):
+                        self._serve_multi(entry, kernel, chunk)
+                served += len(reqs)
+        except Exception as exc:
+            # a failed launch must not strand the rest of the flush set:
+            # every taken-but-unserved future fails with the same cause
+            for _, reqs in taken:
+                for r in reqs:
+                    if not r.future.done():
+                        r.future._set_exception(exc)
+            raise
+        finally:
+            # requests resolved before a mid-flush failure were genuinely
+            # served: keep the counter consistent with their futures
+            self.requests_served += served
+        # flush boundary: all pending requests for this graph are answered
+        # and translated under the generation that served them — only now
+        # may the layout be replaced (skipped if the flush aborted above)
+        session._maybe_redecide(entry)
+        return served
+
+    def _chunks(self, reqs: list[Request]) -> list[list[Request]]:
+        """Greedy coalescing under the source cap, in drain order."""
+        if self.max_batch_sources is None:
+            return [reqs]
+        chunks: list[list[Request]] = []
+        cur: list[Request] = []
+        total = 0
+        for r in reqs:
+            if cur and total + r.num_sources > self.max_batch_sources:
+                chunks.append(cur)
+                cur, total = [], 0
+            cur.append(r)
+            total += r.num_sources
+        if cur:
+            chunks.append(cur)
+        return chunks
+
+    def _serve_multi(self, entry, kernel: str, reqs: list[Request]) -> None:
+        """One vmapped launch for every request in ``reqs``; per-request
+        rows sliced back out of the (S, V) result."""
+        session = self.session
+        all_sources = np.concatenate([r.sources for r in reqs])
+        try:
+            out, wall = session._launch(entry, kernel, all_sources)
+        except Exception as exc:
+            for r in reqs:
+                r.future._set_exception(exc)
+            raise
+        exchange = session._last_exchange(entry)
+        total = int(all_sources.size)
+        session.policy.observe_batch_sources(total)
+        self.launches += 1
+        if len(reqs) > 1:
+            self.coalesced_requests += len(reqs)
+        offset = 0
+        for r in reqs:
+            # copy: a slice view would pin the whole (S_total, V) launch
+            # array for as long as any one future's result is retained
+            rows = out[offset:offset + r.num_sources].copy()
+            offset += r.num_sources
+            share = wall * (r.num_sources / max(total, 1))
+            self._account(entry, r, rows, wall, share, len(reqs), total,
+                          exchange)
+
+    def _serve_global(self, entry, kernel: str, reqs: list[Request]) -> None:
+        """One run, fanned out to every waiter (the result is
+        source-independent, so concurrent requests are duplicates)."""
+        session = self.session
+        try:
+            out, wall = session._launch(entry, kernel, None)
+        except Exception as exc:
+            for r in reqs:
+                r.future._set_exception(exc)
+            raise
+        exchange = session._last_exchange(entry)
+        self.launches += 1
+        if len(reqs) > 1:
+            self.coalesced_requests += len(reqs)
+            self.dedup_hits += len(reqs) - 1
+        for r in reqs:
+            self._account(entry, r, out, wall, wall / len(reqs), len(reqs),
+                          0, exchange)
+
+    def _account(self, entry, req: Request, result: np.ndarray, wall: float,
+                 wall_share: float, sharing: int, batch_sources: int,
+                 exchange: dict | None) -> None:
+        """Resolve one future: ledger, realized-volume, telemetry."""
+        session = self.session
+        req.generation = entry.generation
+        entry.ledger.record_query(req.num_sources, wall_share)
+        session.registry.note_queries(entry.graph_id)
+        served_at = time.perf_counter()
+        missed = req.deadline is not None and served_at > req.deadline
+        if missed:
+            self.deadlines_missed += 1
+        req.future.telemetry = {
+            "kernel": req.kernel,
+            "graph_id": req.graph_id,
+            "priority": req.priority,
+            "generation": req.generation,
+            "launch_index": self.launches,  # 1-based, in launch order
+            "launch_wall_seconds": wall,
+            "wall_share_seconds": wall_share,
+            "coalesced_with": sharing - 1,
+            "launch_batch_sources": batch_sources,
+            "queue_seconds": served_at - req.enqueued_at,
+            "deadline_missed": missed,
+            "exchange": exchange,
+        }
+        req.future._set_result(result)
+
+    # ----------------------------------------------------------- telemetry
+    def telemetry(self) -> dict:
+        return {
+            "requests_enqueued": self.requests_enqueued,
+            "requests_served": self.requests_served,
+            "pending": self.pending(),
+            "launches": self.launches,
+            "coalesced_requests": self.coalesced_requests,
+            "dedup_hits": self.dedup_hits,
+            "flushes": self.flushes,
+            "deadlines_missed": self.deadlines_missed,
+            "max_batch_sources": self.max_batch_sources,
+        }
+
+
+__all__ = ["LABEL_KERNELS", "MicroBatchScheduler", "QueryFuture", "Request",
+           "canonical_component_labels", "source_bucket"]

@@ -1,14 +1,24 @@
-"""Session front-end: register graphs, submit query batches, read telemetry.
+"""Session front-end: register graphs, enqueue/submit queries, telemetry.
 
 ``EngineSession`` ties the subsystem together: registration probes the
 graph (registry), picks and applies a reordering *and a placement*
 (policy: single-device bucketed upload, or sharded across devices when
 the CSR footprint exceeds the device budget — see backends.py), uploads
 the served layout through the chosen backend, and opens an amortization
-ledger; ``submit`` translates query sources into the served id space,
-runs the batched executor against the graph's backend handle, and
-translates results back — callers never see the internal layout or the
-placement.
+ledger.
+
+The primary query API is the **request plane** (scheduler.py):
+``enqueue(...)`` returns a `QueryFuture` and nothing launches until a
+flush boundary, where the `MicroBatchScheduler` coalesces pending
+multi-source requests into one vmapped launch, deduplicates concurrent
+global-kernel requests, and drains in priority/deadline order.
+``submit`` remains as enqueue + flush sugar — the exact blocking
+behaviour it always had, one request riding a one-element micro-batch.
+Either way sources are translated into the served id space at launch
+time, results are translated back (component-label *values* are
+canonicalized to original vertex ids too — scheduler.py's
+`canonical_component_labels`), and callers never see the internal layout
+or the placement.
 
 A registration-time decision is **not final**. The session tracks
 realized query volume per graph, and when it diverges from the
@@ -35,9 +45,11 @@ import numpy as np
 
 from ..cache.sim import estimate_miss_rate, scaled_config
 from ..core.csr import Graph
-from .executor import GLOBAL, MULTI_SOURCE, BatchedExecutor
+from .executor import MULTI_SOURCE, BatchedExecutor
 from .policy import PolicyDecision, ReorderPolicy
 from .registry import GraphEntry, GraphRegistry
+from .scheduler import (LABEL_KERNELS, MicroBatchScheduler, QueryFuture,
+                        canonical_component_labels)
 
 
 @dataclasses.dataclass
@@ -105,7 +117,7 @@ class AmortizationLedger:
 
 
 class EngineSession:
-    """submit(graph_id, kernel, sources) -> results, in original vertex ids."""
+    """enqueue(...) -> QueryFuture / submit(...) -> results (original ids)."""
 
     def __init__(self, policy: ReorderPolicy | None = None,
                  registry: GraphRegistry | None = None,
@@ -116,7 +128,8 @@ class EngineSession:
                  max_redecisions: int = 3,
                  device_budget_bytes: int | None = None,
                  num_shards: int | None = None,
-                 sharded_gain_discount: float = 0.5):
+                 sharded_gain_discount: float = 0.5,
+                 max_batch_sources: int | None = None):
         # an explicitly supplied policy carries its own budget; the
         # session-level knob only configures the default policy
         self.policy = policy or ReorderPolicy(
@@ -129,6 +142,8 @@ class EngineSession:
         self.max_redecisions = max_redecisions
         self.sharded_gain_discount = sharded_gain_discount
         self.redecision_log: list[dict] = []
+        self.scheduler = MicroBatchScheduler(
+            self, max_batch_sources=max_batch_sources)
 
     # ----------------------------------------------------------- register
     def register(self, graph: Graph, graph_id: str | None = None,
@@ -142,8 +157,15 @@ class EngineSession:
                         decision: PolicyDecision) -> None:
         """Reorder ``entry.graph`` per ``decision`` and (re)build serving
         state: permutations, served layout, device arrays, policy record,
-        fresh ledger. Used at registration and again on re-decision."""
+        fresh ledger. Used at registration and again on re-decision.
+
+        Bumps the entry's layout ``generation``: the scheduler stamps
+        every served request with the generation whose perm translated
+        it, and only re-decides at flush boundaries, so no in-flight
+        future ever straddles this replacement.
+        """
         entry.decision = decision
+        entry.generation += 1
         t0 = time.perf_counter()
         perm = np.asarray(self.policy.reorder_fn(decision)(entry.graph))
         entry.reorder_seconds = time.perf_counter() - t0
@@ -259,48 +281,98 @@ class EngineSession:
         self.redecision_log.append(event)
         return event
 
-    # ------------------------------------------------------------- submit
+    # ------------------------------------------------------ request plane
+    def enqueue(self, graph_id: str, kernel: str, sources=None,
+                priority: int = 0,
+                deadline_seconds: float | None = None) -> QueryFuture:
+        """Queue one query; returns a `QueryFuture` (the primary API).
+
+        Nothing launches until ``flush()``/``drain()`` (or the future's
+        own ``result()``, which flushes this graph). Pending requests on
+        the same (graph, kernel) coalesce into shared device launches —
+        see scheduler.py for the batching, dedup, and ordering rules.
+        Sources and results use original vertex ids throughout.
+        """
+        return self.scheduler.enqueue(graph_id, kernel, sources,
+                                      priority=priority,
+                                      deadline_seconds=deadline_seconds)
+
+    def flush(self, graph_id: str | None = None) -> int:
+        """Serve everything pending (for one graph, or all); returns the
+        number of requests served. Re-decisions happen here, per graph,
+        after its pending requests are answered."""
+        return self.scheduler.flush(graph_id)
+
+    def drain(self) -> int:
+        """Flush until no request is pending (lifecycle close)."""
+        return self.scheduler.drain()
+
     def submit(self, graph_id: str, kernel: str,
                sources=None) -> np.ndarray:
-        """Run one query batch. Sources and results use original ids.
+        """Blocking sugar: enqueue + flush one query batch.
 
         Multi-source kernels (bfs/sssp/bc) return per-source rows
-        ``(S, V)``; global kernels (pr/cc/ccsv) return ``(V,)``.
+        ``(S, V)``; global kernels (pr/cc/ccsv) return ``(V,)``. Results
+        use original vertex ids — including component-label *values* for
+        cc/ccsv (min original id per component). Note: the flush serves
+        *all* pending requests on this graph, so interleaving ``submit``
+        with ``enqueue`` on one graph resolves the queued futures too.
         """
-        entry = self.registry.get(graph_id)
-        num_sources = 0
-        if kernel in MULTI_SOURCE:
-            srcs = np.atleast_1d(np.asarray(sources, dtype=np.int64))
-            num_sources = int(srcs.size)
-            sources = entry.perm[srcs].astype(np.int32)
-        t0 = time.perf_counter()
-        out = np.asarray(self.executor.run(entry.handle, kernel, sources))
-        wall = time.perf_counter() - t0
-        entry.ledger.record_query(num_sources, wall)
-        self.registry.note_queries(graph_id)
-        # translate back: result for original vertex v lives at served
-        # position perm[v] (label values — cc/ccsv — stay in served space
-        # but remain consistent component ids)
-        result = out[..., entry.perm]
-        # re-decision runs after translation: this result used the old
-        # layout's perm; the next submit sees the new serving state
-        self._maybe_redecide(entry)
-        return result
+        future = self.enqueue(graph_id, kernel, sources)
+        self.scheduler.flush(graph_id)
+        return future.result()
 
     def bc_aggregate(self, graph_id: str, sources) -> np.ndarray:
         """GAP-style BC score: sum of per-source dependencies (V,)."""
         return self.submit(graph_id, "bc", sources).sum(axis=0)
 
+    # ------------------------------------------------- scheduler internals
+    def _launch(self, entry: GraphEntry, kernel: str,
+                sources: np.ndarray | None) -> tuple[np.ndarray, float]:
+        """One device launch against the entry's *current* layout.
+
+        Sources arrive in original ids and are translated through
+        ``entry.perm`` here — at launch time, not enqueue time — so a
+        request enqueued before a re-decision is still translated and
+        un-translated through one consistent generation. Returns the
+        result already back in original id space plus the launch wall.
+        """
+        served_sources = None
+        if kernel in MULTI_SOURCE:
+            served_sources = entry.perm[sources].astype(np.int32)
+        t0 = time.perf_counter()
+        out = np.asarray(self.executor.run(entry.handle, kernel,
+                                           served_sources))
+        wall = time.perf_counter() - t0
+        # translate back: result for original vertex v lives at served
+        # position perm[v]; component-label *values* (cc/ccsv) are served
+        # ids and are canonicalized to min-original-id-per-component so
+        # callers never see the internal layout (PR 4 leaked this)
+        result = out[..., entry.perm]
+        if kernel in LABEL_KERNELS:
+            result = canonical_component_labels(result)
+        return result, wall
+
+    def _last_exchange(self, entry: GraphEntry) -> dict | None:
+        """Per-run ExchangeStats delta of the launch that just returned
+        (sharded placements only — the single-device path has no
+        collective exchange to account)."""
+        if entry.backend != "sharded":
+            return None
+        return self.executor.sharded.last_run_exchange
+
     # ---------------------------------------------------------- telemetry
     def telemetry(self) -> dict:
         return {
             "executor": self.executor.telemetry(),
+            "scheduler": self.scheduler.telemetry(),
             "policy": [r.as_dict() for r in self.policy.history],
             "calibration": self.policy.calibrator.as_dict(),
             "redecisions": list(self.redecision_log),
             "graphs": {
                 gid: {
                     "scheme": e.decision.scheme if e.decision else None,
+                    "generation": e.generation,
                     "backend": e.backend,
                     "hot_prefix_fraction": e.hot_prefix_fraction,
                     "bucket_shape": e.bucket_shape,

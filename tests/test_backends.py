@@ -91,6 +91,42 @@ def test_bucket_padding_property_random_powerlaw():
     check()
 
 
+def test_compiled_executable_cache_lru_eviction():
+    """Satellite (ROADMAP): a long stream of distinct shapes must keep the
+    compiled-executable cache bounded — LRU eviction with telemetry, and
+    an evicted shape that returns recompiles correctly."""
+    backend = SingleDeviceBackend(bucketing=False, max_cached_executables=3)
+    graphs = [powerlaw_community(n, avg_degree=4.0, seed=n)
+              for n in (60, 90, 120, 150, 180, 210)]
+    assert len({(g.num_vertices, g.num_edges) for g in graphs}) == 6
+    outs = [np.asarray(backend.run(backend.prepare(g), "bfs",
+                                   np.array([0], np.int32)))
+            for g in graphs]
+    assert len(backend._cache) <= 3
+    assert backend.cache_evictions == 3
+    t = backend.telemetry()
+    assert t["cache_evictions"] == 3
+    assert t["max_cached_executables"] == 3
+    assert len(t["cached_keys"]) <= 3
+    # evicted shape returns: a counted miss, bit-identical result
+    misses = backend.cache_misses
+    again = np.asarray(backend.run(backend.prepare(graphs[0]), "bfs",
+                                   np.array([0], np.int32)))
+    assert backend.cache_misses == misses + 1
+    np.testing.assert_array_equal(again, outs[0])
+    # a hit refreshes recency: the just-used key survives the next insert
+    backend.run(backend.prepare(graphs[0]), "bfs", np.array([0], np.int32))
+    backend.run(backend.prepare(powerlaw_community(240, avg_degree=4.0,
+                                                   seed=240)),
+                "bfs", np.array([0], np.int32))
+    assert ("bfs", graphs[0].num_vertices, graphs[0].num_edges,
+            False) in backend._cache
+    # unbounded by default; cap of zero is rejected
+    assert SingleDeviceBackend().max_cached_executables is None
+    with pytest.raises(ValueError):
+        SingleDeviceBackend(max_cached_executables=0)
+
+
 def test_compile_sharing_across_distinct_shapes():
     """Graphs of different (V, E) in one bucket share one compile key."""
     backend = SingleDeviceBackend()

@@ -103,6 +103,24 @@ def test_exchange_stats_accounting():
     assert st.savings_fraction == pytest.approx(0.6)
     d = st.as_dict()
     assert d["bytes_exchanged"] == 120 and d["savings_fraction"] == 0.6
+    assert d["steps"] == 3
+
+
+def test_exchange_stats_snapshot_delta():
+    """Satellite: snapshot/delta attributes the shared counter to one run
+    — what the scheduler stamps into per-request telemetry."""
+    st = ExchangeStats()
+    st.record_full(100)
+    before = st.snapshot()
+    st.record_full(50)
+    st.record_hot(10, 50)
+    run = st.delta(before)
+    assert run.steps == 2 and run.bytes_exchanged == 60
+    assert run.bytes_full_equivalent == 100
+    assert run.savings_fraction == pytest.approx(0.4)
+    # the aggregate keeps everything; the delta saw only its slice
+    assert st.steps == 3 and st.bytes_exchanged == 160
+    assert st.delta(st.snapshot()).steps == 0
 
 
 def test_hot_prefix_exact_and_saves_bytes_four_shards():
