@@ -37,10 +37,25 @@ def run_forced_four_devices(argv: list[str], timeout: int = 600):
                           capture_output=True, text=True, timeout=timeout)
 
 
+def _reject_constant(s: str):
+    raise ValueError(f"non-standard JSON constant {s!r} in benchmark result")
+
+
 def save_json(name: str, obj) -> pathlib.Path:
+    """Write a result file as *strict* JSON.
+
+    ``allow_nan=False`` refuses the Infinity/NaN literals Python's json
+    would otherwise emit (they break every spec-compliant parser);
+    harness code must encode unbounded values as ``None`` plus an
+    explicit flag (e.g. ``break_even_never``). The round-trip below
+    re-parses what we wrote with constants rejected, so a regression
+    fails at save time, not in whatever reads the results later.
+    """
     RESULTS.mkdir(parents=True, exist_ok=True)
     p = RESULTS / f"{name}.json"
-    p.write_text(json.dumps(obj, indent=1, default=float))
+    text = json.dumps(obj, indent=1, default=float, allow_nan=False)
+    json.loads(text, parse_constant=_reject_constant)
+    p.write_text(text)
     return p
 
 

@@ -69,8 +69,10 @@ def _phase_decisions(session, suite, batch, repeats):
         t_after, _ = time_call(session.executor.run, ga_served, "bfs",
                                srcs_served, repeats=repeats)
         saving = t_before - t_after
-        wall_break_even = (entry.reorder_seconds / saving
-                           if saving > 1e-9 else float("inf"))
+        # "never amortizes" is encoded as null + a flag, not Infinity —
+        # strict JSON (common.save_json) has no spelling for infinity
+        never = saving <= 1e-9
+        wall_break_even = None if never else entry.reorder_seconds / saving
         rec = next(r for r in session.policy.history if r.graph_id == gid)
         rows.append({
             "dataset": dname,
@@ -83,9 +85,9 @@ def _phase_decisions(session, suite, batch, repeats):
             "batch": int(batch),
             "query_seconds_before": round(t_before, 5),
             "query_seconds_after": round(t_after, 5),
-            "wall_break_even_queries": (round(wall_break_even, 1)
-                                        if np.isfinite(wall_break_even)
-                                        else "inf"),
+            "wall_break_even_queries": (None if never
+                                        else round(wall_break_even, 1)),
+            "wall_break_even_never": never,
         })
         print(f"[engine] {dname}: {entry.decision.scheme} "
               f"{entry.decision.kwargs}, reorder "
@@ -397,9 +399,111 @@ def _phase_scheduler(scale, requests: int = 16, sources_each: int = 2):
     return out
 
 
-def run(scale: float = 0.5, batch: int = 8, repeats: int = 5) -> list[dict]:
+def _phase_observability(scale, requests: int = 64):
+    """Observability plane: a 64-request mixed-kernel burst through one
+    session, reporting p50/p99 queue-wait and serve latencies from the
+    engine's own histograms, and exporting the request trace as
+    Perfetto-loadable Chrome trace JSON next to the results. The trace is
+    structurally validated (nesting, envelope) and every served future's
+    trace id must appear in it."""
+    from repro.core.generators import powerlaw_community
+    from repro.engine import EngineSession
+    from repro.engine.obs import (merge_histogram_snapshots,
+                                  validate_chrome_trace)
+
+    from .common import RESULTS
+
+    n = max(2000, int(20_000 * scale))
+    g = powerlaw_community(n, avg_degree=10.0, seed=51, name="obs")
+    session = EngineSession(redecide_min_queries=10**6)
+    gid = session.register(g, graph_id="obs", expected_queries=256)
+    rng = np.random.default_rng(23)
+    kernels = ("bfs", "sssp", "bc", "pr", "cc", "ccsv")
+    futs = []
+    for i in range(requests):
+        kernel = kernels[i % len(kernels)]
+        srcs = (rng.integers(0, n, size=2)
+                if kernel in ("bfs", "sssp", "bc") else None)
+        # a third of the burst carries deadlines so the slack histogram
+        # (and deadlines_missed attribution) exercises too
+        dl = 5.0 if i % 3 == 0 else None
+        futs.append(session.enqueue(gid, kernel, srcs,
+                                    deadline_seconds=dl))
+    session.drain()
+    for f in futs:
+        np.asarray(f.result())
+
+    snap = session.metrics().snapshot()
+    qw = snap["histograms"]["engine_queue_wait_seconds"]
+    sv = snap["histograms"]["engine_serve_seconds"]
+    overall_qw = merge_histogram_snapshots(list(qw.values()))
+    overall_sv = merge_histogram_snapshots(list(sv.values()))
+    assert overall_qw["count"] == requests, overall_qw["count"]
+    assert overall_sv["count"] == requests, overall_sv["count"]
+    per_kernel = {
+        key.split("kernel=")[-1]: {
+            "count": s["count"],
+            "p50_ms": round(s["p50"] * 1e3, 3),
+            "p99_ms": round(s["p99"] * 1e3, 3),
+        } for key, s in sorted(sv.items())}
+
+    trace_path = session.tracer.export(RESULTS / "engine_trace.json")
+    trace = json.loads(trace_path.read_text())
+    stats = validate_chrome_trace(trace)
+    traced = {e["args"]["trace_id"] for e in trace["traceEvents"]
+              if e.get("ph") == "X" and "trace_id" in e.get("args", {})}
+    missing = [f.trace_id for f in futs if f.trace_id not in traced]
+    assert not missing, f"futures missing from trace: {missing}"
+
+    out = {
+        "requests": requests,
+        "queue_wait": {"count": overall_qw["count"],
+                       "p50_ms": round(overall_qw["p50"] * 1e3, 3),
+                       "p99_ms": round(overall_qw["p99"] * 1e3, 3)},
+        "serve": {"count": overall_sv["count"],
+                  "p50_ms": round(overall_sv["p50"] * 1e3, 3),
+                  "p99_ms": round(overall_sv["p99"] * 1e3, 3)},
+        "per_kernel_serve": per_kernel,
+        "trace_file": trace_path.name,
+        "trace": stats,
+        "dropped_events": trace["otherData"]["dropped_events"],
+        "scheduler": session.scheduler.telemetry(),
+    }
+    print(f"[engine] observability: {requests}-request burst, queue-wait "
+          f"p50={out['queue_wait']['p50_ms']:.1f}ms "
+          f"p99={out['queue_wait']['p99_ms']:.1f}ms, serve "
+          f"p50={out['serve']['p50_ms']:.1f}ms "
+          f"p99={out['serve']['p99_ms']:.1f}ms, trace {trace_path.name}: "
+          f"{stats['complete_spans']} spans on {stats['tracks']} tracks",
+          flush=True)
+    return out
+
+
+PHASES = ("decisions", "redecision", "calibration", "bucketing", "sharded",
+          "hot_prefix", "scheduler", "observability")
+
+
+def parse_phases(value: str | None) -> list[str]:
+    if not value:
+        return list(PHASES)
+    names = [n.strip() for n in value.split(",") if n.strip()]
+    unknown = sorted(set(names) - set(PHASES))
+    if unknown:
+        raise SystemExit(f"unknown phase(s) {', '.join(unknown)}; "
+                         f"choose from {', '.join(PHASES)}")
+    return names
+
+
+def run(scale: float = 0.5, batch: int = 8, repeats: int = 5,
+        phases: list[str] | None = None) -> list[dict]:
     from repro.core.generators import road_grid
     from repro.engine import EngineSession
+
+    todo = set(phases or PHASES)
+    # the calibration replay reads state the earlier phases create (the
+    # suite registrations and the "burst" graph's probes)
+    if "calibration" in todo:
+        todo |= {"decisions", "redecision"}
 
     session = EngineSession()
     suite = dict(bench_suite(scale))
@@ -407,37 +511,48 @@ def run(scale: float = 0.5, batch: int = 8, repeats: int = 5) -> list[dict]:
     suite["road-sim"] = road_grid(side, shortcuts=64, seed=13,
                                   name="road-sim")
 
-    rows = _phase_decisions(session, suite, batch, repeats)
-    redecision = _phase_redecision(session, scale)
-    flip = _phase_calibration_flip(session, suite)
-    bucketing = _phase_bucketing(scale)
-    sharded = _phase_sharded(scale)
-    hot_prefix = _phase_hot_prefix(scale)
-    scheduler = _phase_scheduler(scale)
+    rows = []
+    out = {}
+    if "decisions" in todo:
+        rows = _phase_decisions(session, suite, batch, repeats)
+        out["rows"] = rows
+    if "redecision" in todo:
+        out["redecision"] = _phase_redecision(session, scale)
+    if "calibration" in todo:
+        out["calibration_flip"] = _phase_calibration_flip(session, suite)
+    if "bucketing" in todo:
+        out["bucketing"] = _phase_bucketing(scale)
+    if "sharded" in todo:
+        out["sharded"] = _phase_sharded(scale)
+    if "hot_prefix" in todo:
+        out["hot_prefix"] = _phase_hot_prefix(scale)
+    if "scheduler" in todo:
+        out["scheduler"] = _phase_scheduler(scale)
+    if "observability" in todo:
+        out["observability"] = _phase_observability(scale)
 
-    out = {
-        "rows": rows,
-        "redecision": redecision,
-        "calibration_flip": flip,
-        "bucketing": bucketing,
-        "sharded": sharded,
-        "hot_prefix": hot_prefix,
-        "scheduler": scheduler,
-        "calibration": session.policy.calibrator.as_dict(),
-        "executor": session.executor.telemetry(),
-    }
+    out["calibration"] = session.policy.calibrator.as_dict()
+    out["executor"] = session.executor.telemetry()
     save_json("engine", out)
     return rows
 
 
-def main(scale: float = 0.5):
-    rows = run(scale)
-    cols = ["dataset", "scheme", "reorder_seconds", "predicted_gain",
-            "realized_gain", "query_seconds_before", "query_seconds_after",
-            "wall_break_even_queries"]
-    print("\n=== engine policy + amortization ===")
-    print(fmt_table(rows, cols))
+def main(scale: float = 0.5, phases: list[str] | None = None):
+    rows = run(scale, phases=phases)
+    if rows:
+        cols = ["dataset", "scheme", "reorder_seconds", "predicted_gain",
+                "realized_gain", "query_seconds_before",
+                "query_seconds_after", "wall_break_even_queries"]
+        print("\n=== engine policy + amortization ===")
+        print(fmt_table(rows, cols))
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--phases", default=None,
+                    help="comma-separated subset of: " + ", ".join(PHASES))
+    a = ap.parse_args()
+    main(a.scale, parse_phases(a.phases))

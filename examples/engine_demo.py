@@ -81,7 +81,7 @@ def main():
     for gid in ids:
         led = t["graphs"][gid]["ledger"]
         be = led["break_even_queries"]
-        be_s = f"{be:.1f}" if np.isfinite(be) else "inf"
+        be_s = "never" if led["break_even_never"] else f"{be:.1f}"
         print(f"   ledger {gid:8s} reorder {led['reorder_seconds']:.3f}s, "
               f"{led['queries_served']} queries, "
               f"saved~{led['estimated_saved_seconds']:.3f}s, "

@@ -129,16 +129,26 @@ class ExchangeStats:
     bytes_full: int = 0
     bytes_hot: int = 0
     bytes_full_equivalent: int = 0
+    # optional per-step observer ``(mode, nbytes, full_nbytes) -> None``:
+    # the engine's sharded backend points this at its tracer while a run
+    # is live, so every host-loop exchange becomes one trace span
+    # (engine/obs.py) without dist growing an engine dependency
+    span_sink: object = dataclasses.field(default=None, compare=False,
+                                          repr=False)
 
     def record_full(self, nbytes: int) -> None:
         self.steps_full += 1
         self.bytes_full += nbytes
         self.bytes_full_equivalent += nbytes
+        if self.span_sink is not None:
+            self.span_sink("full", nbytes, nbytes)
 
     def record_hot(self, nbytes: int, full_nbytes: int) -> None:
         self.steps_hot += 1
         self.bytes_hot += nbytes
         self.bytes_full_equivalent += full_nbytes
+        if self.span_sink is not None:
+            self.span_sink("hot", nbytes, full_nbytes)
 
     def snapshot(self) -> tuple:
         """Counter tuple for per-run attribution (see ``delta``)."""

@@ -21,6 +21,9 @@ from .backends import (SHARDED_KERNELS, ExecutionBackend, GraphHandle,
                        estimate_device_bytes)
 from .calibration import DEFAULT_PRIORS, SchemeStats, StrengthCalibrator
 from .executor import BatchedExecutor
+from .obs import (Clock, Counter, Gauge, Histogram, ManualClock,
+                  MetricsRegistry, ProfilerHook, Tracer,
+                  validate_chrome_trace)
 from .policy import PolicyDecision, PolicyRecord, ReorderPolicy
 from .registry import GraphProbes, GraphRegistry, probe_graph
 from .scheduler import (MicroBatchScheduler, QueryFuture, Request,
@@ -28,11 +31,13 @@ from .scheduler import (MicroBatchScheduler, QueryFuture, Request,
 from .session import AmortizationLedger, EngineSession
 
 __all__ = [
-    "AmortizationLedger", "BatchedExecutor", "DEFAULT_PRIORS",
-    "EngineSession", "ExecutionBackend", "GraphHandle", "GraphProbes",
-    "GraphRegistry", "MicroBatchScheduler", "PolicyDecision",
-    "PolicyRecord", "QueryFuture", "ReorderPolicy", "Request",
-    "SHARDED_KERNELS", "SchemeStats", "ShardedBackend",
-    "SingleDeviceBackend", "StrengthCalibrator", "bucket_dims",
-    "canonical_component_labels", "estimate_device_bytes", "probe_graph",
+    "AmortizationLedger", "BatchedExecutor", "Clock", "Counter",
+    "DEFAULT_PRIORS", "EngineSession", "ExecutionBackend", "Gauge",
+    "GraphHandle", "GraphProbes", "GraphRegistry", "Histogram",
+    "ManualClock", "MetricsRegistry", "MicroBatchScheduler",
+    "PolicyDecision", "PolicyRecord", "ProfilerHook", "QueryFuture",
+    "ReorderPolicy", "Request", "SHARDED_KERNELS", "SchemeStats",
+    "ShardedBackend", "SingleDeviceBackend", "StrengthCalibrator",
+    "Tracer", "bucket_dims", "canonical_component_labels",
+    "estimate_device_bytes", "probe_graph", "validate_chrome_trace",
 ]

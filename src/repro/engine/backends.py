@@ -30,6 +30,7 @@ the full picture.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 from collections import OrderedDict
@@ -43,6 +44,7 @@ import jax.numpy as jnp
 from ..algos import kernels as K
 from ..algos.graph_arrays import GraphArrays, to_device
 from ..core.csr import Graph
+from .obs import MetricsRegistry, Tracer
 
 # kernels taking a batch of sources -> (S, V) per-source rows
 MULTI_SOURCE = ("bfs", "sssp", "bc")
@@ -176,6 +178,21 @@ class ExecutionBackend(Protocol):
     def telemetry(self) -> dict: ...
 
 
+def _backend_counters(metrics: MetricsRegistry, backend: str) -> dict:
+    """The per-backend serving counters every backend keeps."""
+    return {
+        "queries": metrics.counter("engine_queries_total",
+                                   "query batches executed",
+                                   backend=backend),
+        "sources": metrics.counter("engine_sources_total",
+                                   "real (unpadded) sources executed",
+                                   backend=backend),
+        "prepared": metrics.counter("engine_graphs_prepared_total",
+                                    "graphs uploaded/prepared",
+                                    backend=backend),
+    }
+
+
 # ------------------------------------------------------------- single device
 class SingleDeviceBackend:
     """Today's path plus shape bucketing: one device, shared compiles.
@@ -195,7 +212,8 @@ class SingleDeviceBackend:
 
     def __init__(self, bucketing: bool = True, growth: float = 2.0,
                  v_floor: int = 256, e_floor: int = 1024,
-                 max_cached_executables: int | None = None):
+                 max_cached_executables: int | None = None,
+                 metrics: MetricsRegistry | None = None):
         if max_cached_executables is not None and max_cached_executables < 1:
             raise ValueError("max_cached_executables must be >= 1 or None")
         self.bucketing = bucketing
@@ -204,13 +222,49 @@ class SingleDeviceBackend:
         self.e_floor = e_floor
         self.max_cached_executables = max_cached_executables
         self._cache: OrderedDict[tuple, object] = OrderedDict()
-        self.cache_hits = 0
-        self.cache_misses = 0
-        self.cache_evictions = 0
-        self.queries_run = 0
-        self.sources_run = 0
-        self.graphs_prepared = 0
+        # counters are registry instruments (obs.py); the legacy int
+        # attributes below are read-through properties over them
+        self.metrics = metrics or MetricsRegistry()
+        self.tracer: Tracer | None = None   # set by the owning session
+        self._counters = _backend_counters(self.metrics, self.name)
+        self._c_hits = self.metrics.counter(
+            "engine_compile_cache_hits_total",
+            "executable cache hits", backend=self.name)
+        self._c_misses = self.metrics.counter(
+            "engine_compile_cache_misses_total",
+            "executable cache misses (compiles)", backend=self.name)
+        self._c_evictions = self.metrics.counter(
+            "engine_cache_evictions_total",
+            "LRU executable evictions", backend=self.name)
         self._bucket_counts: dict[tuple[int, int], int] = {}
+
+    @property
+    def cache_hits(self) -> int:
+        return self._c_hits.value
+
+    @property
+    def cache_misses(self) -> int:
+        return self._c_misses.value
+
+    @property
+    def cache_evictions(self) -> int:
+        return self._c_evictions.value
+
+    @property
+    def queries_run(self) -> int:
+        return self._counters["queries"].value
+
+    @property
+    def sources_run(self) -> int:
+        return self._counters["sources"].value
+
+    @property
+    def graphs_prepared(self) -> int:
+        return self._counters["prepared"].value
+
+    def _span(self, name: str, **args):
+        return (self.tracer.span(name, **args) if self.tracer is not None
+                else contextlib.nullcontext(args))
 
     # -------------------------------------------------------------- prepare
     def prepare(self, graph: Graph,
@@ -220,7 +274,7 @@ class SingleDeviceBackend:
                   if self.bucketing else (n, e))
         arrays = to_device(graph, canonical_ids=canonical_ids,
                            pad_to=bucket if bucket != (n, e) else None)
-        self.graphs_prepared += 1
+        self._counters["prepared"].inc()
         self._bucket_counts[bucket] = self._bucket_counts.get(bucket, 0) + 1
         return GraphHandle(self.name, n, e, bucket,
                            estimate_device_bytes(*bucket), arrays=arrays)
@@ -235,10 +289,13 @@ class SingleDeviceBackend:
                ga.vertex_valid is not None)
         cached = self._cache.get(key)
         if cached is not None:
-            self.cache_hits += 1
+            self._c_hits.inc()
             self._cache.move_to_end(key)     # LRU: refresh recency
             return cached
-        self.cache_misses += 1
+        self._c_misses.inc()
+        if self.tracer is not None:
+            self.tracer.instant("compile_cache_miss", kernel=kernel,
+                                key=str(key))
         # a per-key jit wrapper owns this key's executables, so LRU
         # eviction below actually frees them (the module-level jitted
         # kernel would pin every shape it ever compiled)
@@ -247,7 +304,7 @@ class SingleDeviceBackend:
         if (self.max_cached_executables is not None
                 and len(self._cache) > self.max_cached_executables):
             self._cache.popitem(last=False)  # least recently used
-            self.cache_evictions += 1
+            self._c_evictions.inc()
         return cached
 
     def run_arrays(self, ga: GraphArrays, kernel: str,
@@ -256,14 +313,17 @@ class SingleDeviceBackend:
         build_kernel(kernel)  # unknown kernel: raise before anything counts
         if kernel in GLOBAL:
             fn = self._compiled(kernel, ga)
-            self.queries_run += 1
-            return jax.block_until_ready(fn(ga))
+            self._counters["queries"].inc()
+            out = fn(ga)
+            with self._span("device_sync", kernel=kernel):
+                return jax.block_until_ready(out)
         padded, real = pad_sources(sources, kernel)
         fn = self._compiled(kernel, ga)
-        self.queries_run += 1
-        self.sources_run += real
+        self._counters["queries"].inc()
+        self._counters["sources"].inc(real)
         out = fn(ga, jnp.asarray(padded))
-        return jax.block_until_ready(out)[:real]
+        with self._span("device_sync", kernel=kernel):
+            return jax.block_until_ready(out)[:real]
 
     def run(self, handle: GraphHandle, kernel: str,
             sources=None) -> jnp.ndarray:
@@ -396,7 +456,8 @@ class ShardedBackend:
     name = "sharded"
 
     def __init__(self, num_shards: int | None = None, axis: str = "data",
-                 mesh=None, cold_every: int = 4):
+                 mesh=None, cold_every: int = 4,
+                 metrics: MetricsRegistry | None = None):
         if mesh is None:
             n = num_shards or jax.device_count()
             mesh = jax.make_mesh((n,), (axis,))
@@ -404,9 +465,15 @@ class ShardedBackend:
         self.axis = axis
         self.num_shards = mesh.shape[axis]
         self.cold_every = cold_every
-        self.queries_run = 0
-        self.sources_run = 0
-        self.graphs_prepared = 0
+        self.metrics = metrics or MetricsRegistry()
+        self.tracer: Tracer | None = None   # set by the owning session
+        self._counters = _backend_counters(self.metrics, self.name)
+        self._c_ex_steps = self.metrics.counter(
+            "engine_exchange_steps_total",
+            "sharded per-step collective exchanges")
+        self._c_ex_bytes = self.metrics.counter(
+            "engine_exchange_bytes_total",
+            "bytes received per device across exchanges")
         from ..core.dist import ExchangeStats
         self.exchange_stats = ExchangeStats()
         # exchange delta of the most recent run(): runs are serial, so a
@@ -415,6 +482,18 @@ class ShardedBackend:
         self.last_run_exchange: dict | None = None
         self._prefix_info: list[dict] = []
 
+    @property
+    def queries_run(self) -> int:
+        return self._counters["queries"].value
+
+    @property
+    def sources_run(self) -> int:
+        return self._counters["sources"].value
+
+    @property
+    def graphs_prepared(self) -> int:
+        return self._counters["prepared"].value
+
     def prepare(self, graph: Graph,
                 canonical_ids: np.ndarray | None = None,
                 hot_prefix_fraction: float | None = None) -> GraphHandle:
@@ -422,7 +501,7 @@ class ShardedBackend:
         state = _ShardedGraphState(graph, self.mesh, self.axis,
                                    canonical_ids, hot_prefix_fraction,
                                    self.cold_every, self.exchange_stats)
-        self.graphs_prepared += 1
+        self._counters["prepared"].inc()
         return GraphHandle(self.name, n, e, (n, e),
                            self._per_device_bytes(graph),
                            shard_state=state,
@@ -459,16 +538,41 @@ class ShardedBackend:
                 "per_shard_vertices": runner.per,
                 "prefix_hit_rate": round(runner.prefix_hit_rate, 4),
             })
-        self.queries_run += 1
+        self._counters["queries"].inc()
         before = self.exchange_stats.snapshot()
-        if kernel in GLOBAL:
-            out = jax.block_until_ready(runner())[:handle.num_vertices]
-        else:
-            padded, real = pad_sources(sources, kernel)
-            self.sources_run += real
-            out = jax.block_until_ready(
-                runner(jnp.asarray(padded)))[:real, :handle.num_vertices]
-        self.last_run_exchange = self.exchange_stats.delta(before).as_dict()
+        # per-step exchange spans: while this run is live, every
+        # ExchangeStats record emits one engine-track span covering the
+        # step that ended at the collective — nested under the launch
+        # span the session wraps around executor.run
+        if self.tracer is not None:
+            tracer = self.tracer
+            last = {"t": tracer.clock.now()}
+
+            def _exchange_span(mode: str, nbytes: int,
+                               full_nbytes: int) -> None:
+                now = tracer.clock.now()
+                tracer.emit("exchange", last["t"], now,
+                            args={"mode": mode, "bytes": nbytes,
+                                  "bytes_full_equivalent": full_nbytes,
+                                  "kernel": canon})
+                last["t"] = now
+
+            self.exchange_stats.span_sink = _exchange_span
+        try:
+            if kernel in GLOBAL:
+                out = jax.block_until_ready(runner())[:handle.num_vertices]
+            else:
+                padded, real = pad_sources(sources, kernel)
+                self._counters["sources"].inc(real)
+                out = jax.block_until_ready(
+                    runner(jnp.asarray(padded)))[:real,
+                                                 :handle.num_vertices]
+        finally:
+            self.exchange_stats.span_sink = None
+        delta = self.exchange_stats.delta(before)
+        self._c_ex_steps.inc(delta.steps)
+        self._c_ex_bytes.inc(delta.bytes_exchanged)
+        self.last_run_exchange = delta.as_dict()
         return out
 
     def telemetry(self) -> dict:

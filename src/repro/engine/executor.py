@@ -46,19 +46,40 @@ class BatchedExecutor:
 
     def __init__(self, single: SingleDeviceBackend | None = None,
                  num_shards: int | None = None, bucketing: bool = True,
-                 max_cached_executables: int | None = None):
+                 max_cached_executables: int | None = None,
+                 metrics=None):
         self.single = single or SingleDeviceBackend(
             bucketing=bucketing,
-            max_cached_executables=max_cached_executables)
+            max_cached_executables=max_cached_executables,
+            metrics=metrics)
+        # one registry spans the facade and both backends — a session
+        # adopts it so every engine metric shares a namespace (obs.py)
+        self.metrics = self.single.metrics
         self._num_shards = num_shards
         self._sharded: ShardedBackend | None = None
+        self._tracer = None
 
     @property
     def sharded(self) -> ShardedBackend:
         """Lazy: building a mesh is pointless until a graph needs one."""
         if self._sharded is None:
-            self._sharded = ShardedBackend(num_shards=self._num_shards)
+            self._sharded = ShardedBackend(num_shards=self._num_shards,
+                                           metrics=self.metrics)
+            self._sharded.tracer = self._tracer
         return self._sharded
+
+    @property
+    def tracer(self):
+        return self._tracer
+
+    @tracer.setter
+    def tracer(self, tracer) -> None:
+        """Hand the session's tracer to both backends (for launch-internal
+        spans: device_sync, compile misses, per-step exchanges)."""
+        self._tracer = tracer
+        self.single.tracer = tracer
+        if self._sharded is not None:
+            self._sharded.tracer = tracer
 
     def backend(self, name: str) -> ExecutionBackend:
         if name == "single":

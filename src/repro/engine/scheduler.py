@@ -35,6 +35,15 @@ the front door into a request plane:
   generation that served it, whether its deadline was met, and (sharded
   placements) the per-run `ExchangeStats` delta from ``core/dist.py``.
 
+* **observability** (obs.py, docs/observability.md) — every counter here
+  is a view over the session's `MetricsRegistry` (the old ``telemetry()``
+  dict shape is preserved as a facade), queue-wait / serve-latency /
+  deadline-slack histograms are recorded per ``(graph_id, kernel)``, and
+  each request carries a ``trace_id`` tying its per-request trace track
+  (enqueue → queue_wait → serve) to the engine track's flush / coalesce /
+  translate / launch spans. All timing flows through the session's
+  injectable clock, so latency tests are deterministic.
+
 ``EngineSession.submit`` is reimplemented as enqueue + flush sugar, so
 the blocking API is exactly one request riding a one-element batch —
 bit-identical results, same id translation, same ledger accounting.
@@ -44,12 +53,12 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import time
 from typing import TYPE_CHECKING
 
 import numpy as np
 
 from .backends import GLOBAL, MULTI_SOURCE, build_kernel, source_bucket
+from .obs import REQUEST_TID_BASE, signed_log_boundaries
 
 if TYPE_CHECKING:  # import cycle: session builds the scheduler
     from .session import EngineSession
@@ -93,6 +102,7 @@ class Request:
     enqueued_at: float
     future: "QueryFuture"
     generation: int | None = None  # layout generation that served it
+    trace_id: str | None = None    # ties this request's spans together
 
     @property
     def num_sources(self) -> int:
@@ -142,6 +152,11 @@ class QueryFuture:
         """The launch failure, if any (None while pending or on success)."""
         return self._exception
 
+    @property
+    def trace_id(self) -> str:
+        """Id shared by every trace span of this request's lifecycle."""
+        return self.request.trace_id
+
     # ------------------------------------------------------------ internal
     def _set_result(self, value: np.ndarray) -> None:
         self._result = value
@@ -172,14 +187,67 @@ class MicroBatchScheduler:
         self.max_batch_sources = max_batch_sources
         self._queues: dict[tuple[str, str], list[Request]] = {}
         self._seq = itertools.count()
-        # counters: the coalescing story in numbers
-        self.requests_enqueued = 0
-        self.requests_served = 0
-        self.launches = 0
-        self.coalesced_requests = 0   # requests that shared a launch
-        self.dedup_hits = 0           # global requests served without a run
-        self.flushes = 0
-        self.deadlines_missed = 0
+        # counters live in the session's metrics registry; the public
+        # attributes below (and telemetry()) are read-through views, so
+        # the pre-obs shapes survive while the registry is the one truth
+        m = session.metrics_registry
+        self._c_enqueued = m.counter(
+            "engine_requests_enqueued_total", "requests accepted by enqueue")
+        self._c_served = m.counter(
+            "engine_requests_served_total", "futures resolved with a result")
+        self._c_failed = m.counter(
+            "engine_requests_failed_total", "futures resolved with an error")
+        self._c_launches = m.counter(
+            "engine_launches_total", "device launches issued")
+        self._c_launches_failed = m.counter(
+            "engine_launches_failed_total", "device launches that raised")
+        self._c_coalesced = m.counter(
+            "engine_coalesced_requests_total", "requests that shared a launch")
+        self._c_dedup = m.counter(
+            "engine_dedup_hits_total", "global requests served without a run")
+        self._c_flushes = m.counter("engine_flushes_total", "flush boundaries")
+        self._c_deadlines = m.counter(
+            "engine_deadlines_missed_total", "requests served past deadline")
+        self._g_pending = m.gauge(
+            "engine_pending_requests", "requests enqueued but not served")
+        self._metrics = m
+
+    # --------------------------------------------- registry-backed counters
+    @property
+    def requests_enqueued(self) -> int:
+        return self._c_enqueued.value
+
+    @property
+    def requests_served(self) -> int:
+        return self._c_served.value
+
+    @property
+    def requests_failed(self) -> int:
+        return self._c_failed.value
+
+    @property
+    def launches(self) -> int:
+        return self._c_launches.value
+
+    @property
+    def launches_failed(self) -> int:
+        return self._c_launches_failed.value
+
+    @property
+    def coalesced_requests(self) -> int:
+        return self._c_coalesced.value
+
+    @property
+    def dedup_hits(self) -> int:
+        return self._c_dedup.value
+
+    @property
+    def flushes(self) -> int:
+        return self._c_flushes.value
+
+    @property
+    def deadlines_missed(self) -> int:
+        return self._c_deadlines.value
 
     # ------------------------------------------------------------- enqueue
     def enqueue(self, graph_id: str, kernel: str, sources=None,
@@ -202,16 +270,24 @@ class MicroBatchScheduler:
                 raise ValueError(
                     f"{kernel} sources must be in [0, {n}); got "
                     f"[{int(srcs.min())}, {int(srcs.max())}]")
-        now = time.perf_counter()
+        now = self.session.clock.now()
+        seq = next(self._seq)
         req = Request(
-            seq=next(self._seq), graph_id=graph_id, kernel=kernel,
+            seq=seq, graph_id=graph_id, kernel=kernel,
             sources=srcs, priority=priority,
             deadline=(now + deadline_seconds
                       if deadline_seconds is not None else None),
-            enqueued_at=now, future=None)  # type: ignore[arg-type]
+            enqueued_at=now, future=None,  # type: ignore[arg-type]
+            trace_id=f"req-{seq}")
         req.future = QueryFuture(self, req)
         self._queues.setdefault((graph_id, kernel), []).append(req)
-        self.requests_enqueued += 1
+        self._c_enqueued.inc()
+        self._g_pending.inc()
+        tracer = self.session.tracer
+        tracer.set_thread_name(REQUEST_TID_BASE + seq, req.trace_id)
+        tracer.instant("enqueue", tid=REQUEST_TID_BASE + seq,
+                       trace_id=req.trace_id, graph_id=graph_id,
+                       kernel=kernel, priority=priority)
         return req.future
 
     def pending(self, graph_id: str | None = None) -> int:
@@ -233,7 +309,7 @@ class MicroBatchScheduler:
                 if gid not in graphs:
                     graphs.append(gid)
         served = 0
-        self.flushes += 1
+        self._c_flushes.inc()
         for gid in graphs:
             served += self._flush_graph(gid)
         return served
@@ -263,14 +339,16 @@ class MicroBatchScheduler:
         served = 0
         taken = self._take_queues(graph_id)
         try:
-            for kernel, reqs in taken:
-                reqs.sort(key=Request.order_key)
-                if kernel in GLOBAL:
-                    self._serve_global(entry, kernel, reqs)
-                else:
-                    for chunk in self._chunks(reqs):
-                        self._serve_multi(entry, kernel, chunk)
-                served += len(reqs)
+            with session.tracer.span("flush", graph_id=graph_id,
+                                     requests=sum(len(r) for _, r in taken)):
+                for kernel, reqs in taken:
+                    reqs.sort(key=Request.order_key)
+                    if kernel in GLOBAL:
+                        self._serve_global(entry, kernel, reqs)
+                    else:
+                        for chunk in self._chunks(reqs):
+                            self._serve_multi(entry, kernel, chunk)
+                    served += len(reqs)
         except Exception as exc:
             # a failed launch must not strand the rest of the flush set:
             # every taken-but-unserved future fails with the same cause
@@ -278,11 +356,13 @@ class MicroBatchScheduler:
                 for r in reqs:
                     if not r.future.done():
                         r.future._set_exception(exc)
+                        self._c_failed.inc()
+                        self._g_pending.dec()
             raise
         finally:
             # requests resolved before a mid-flush failure were genuinely
             # served: keep the counter consistent with their futures
-            self.requests_served += served
+            self._c_served.inc(served)
         # flush boundary: all pending requests for this graph are answered
         # and translated under the generation that served them — only now
         # may the layout be replaced (skipped if the flush aborted above)
@@ -310,60 +390,98 @@ class MicroBatchScheduler:
         """One vmapped launch for every request in ``reqs``; per-request
         rows sliced back out of the (S, V) result."""
         session = self.session
-        all_sources = np.concatenate([r.sources for r in reqs])
+        launch_begin = session.clock.now()
+        with session.tracer.span("coalesce", graph_id=entry.graph_id,
+                                 kernel=kernel, requests=len(reqs)):
+            all_sources = np.concatenate([r.sources for r in reqs])
         try:
             out, wall = session._launch(entry, kernel, all_sources)
         except Exception as exc:
-            for r in reqs:
-                r.future._set_exception(exc)
+            self._fail_launch(reqs, exc)
             raise
         exchange = session._last_exchange(entry)
         total = int(all_sources.size)
         session.policy.observe_batch_sources(total)
-        self.launches += 1
+        self._c_launches.inc()
         if len(reqs) > 1:
-            self.coalesced_requests += len(reqs)
+            self._c_coalesced.inc(len(reqs))
         offset = 0
-        for r in reqs:
-            # copy: a slice view would pin the whole (S_total, V) launch
-            # array for as long as any one future's result is retained
-            rows = out[offset:offset + r.num_sources].copy()
-            offset += r.num_sources
-            share = wall * (r.num_sources / max(total, 1))
-            self._account(entry, r, rows, wall, share, len(reqs), total,
-                          exchange)
+        with session.tracer.span("slice_out", graph_id=entry.graph_id,
+                                 kernel=kernel, requests=len(reqs)):
+            for r in reqs:
+                # copy: a slice view would pin the whole (S_total, V) launch
+                # array for as long as any one future's result is retained
+                rows = out[offset:offset + r.num_sources].copy()
+                offset += r.num_sources
+                share = wall * (r.num_sources / max(total, 1))
+                self._account(entry, r, rows, wall, share, len(reqs), total,
+                              exchange, launch_begin)
 
     def _serve_global(self, entry, kernel: str, reqs: list[Request]) -> None:
         """One run, fanned out to every waiter (the result is
         source-independent, so concurrent requests are duplicates)."""
         session = self.session
+        launch_begin = session.clock.now()
         try:
             out, wall = session._launch(entry, kernel, None)
         except Exception as exc:
-            for r in reqs:
-                r.future._set_exception(exc)
+            self._fail_launch(reqs, exc)
             raise
         exchange = session._last_exchange(entry)
-        self.launches += 1
+        self._c_launches.inc()
         if len(reqs) > 1:
-            self.coalesced_requests += len(reqs)
-            self.dedup_hits += len(reqs) - 1
+            self._c_coalesced.inc(len(reqs))
+            self._c_dedup.inc(len(reqs) - 1)
         for r in reqs:
             self._account(entry, r, out, wall, wall / len(reqs), len(reqs),
-                          0, exchange)
+                          0, exchange, launch_begin)
+
+    def _fail_launch(self, reqs: list[Request], exc: BaseException) -> None:
+        """One launch raised: fail its riders, count the outcome."""
+        self._c_launches_failed.inc()
+        for r in reqs:
+            r.future._set_exception(exc)
+            self._c_failed.inc()
+            self._g_pending.dec()
 
     def _account(self, entry, req: Request, result: np.ndarray, wall: float,
                  wall_share: float, sharing: int, batch_sources: int,
-                 exchange: dict | None) -> None:
-        """Resolve one future: ledger, realized-volume, telemetry."""
+                 exchange: dict | None, launch_begin: float) -> None:
+        """Resolve one future: ledger, realized-volume, telemetry,
+        latency histograms, and the request's trace track."""
         session = self.session
         req.generation = entry.generation
         entry.ledger.record_query(req.num_sources, wall_share)
         session.registry.note_queries(entry.graph_id)
-        served_at = time.perf_counter()
+        served_at = session.clock.now()
         missed = req.deadline is not None and served_at > req.deadline
         if missed:
-            self.deadlines_missed += 1
+            self._c_deadlines.inc()
+        labels = {"graph_id": req.graph_id, "kernel": req.kernel}
+        queue_wait = launch_begin - req.enqueued_at
+        serve_latency = served_at - req.enqueued_at
+        m = self._metrics
+        m.histogram("engine_queue_wait_seconds",
+                    "enqueue -> launch start", **labels).observe(queue_wait)
+        m.histogram("engine_serve_seconds",
+                    "enqueue -> result resolved (end-to-end)",
+                    **labels).observe(serve_latency)
+        if req.deadline is not None:
+            # slack > 0: met with room; < 0: by how much it was missed —
+            # the attributable version of the deadlines_missed counter
+            m.histogram("engine_deadline_slack_seconds",
+                        "deadline - served_at (negative = missed by)",
+                        boundaries=signed_log_boundaries(),
+                        **labels).observe(req.deadline - served_at)
+        tid = REQUEST_TID_BASE + req.seq
+        tracer = session.tracer
+        span_args = {"trace_id": req.trace_id, **labels}
+        tracer.emit("queue_wait", req.enqueued_at, launch_begin, tid=tid,
+                    args=span_args)
+        tracer.emit("serve", launch_begin, served_at, tid=tid,
+                    args={**span_args, "coalesced_with": sharing - 1,
+                          "deadline_missed": missed})
+        self._g_pending.dec()
         req.future.telemetry = {
             "kernel": req.kernel,
             "graph_id": req.graph_id,
@@ -374,14 +492,17 @@ class MicroBatchScheduler:
             "wall_share_seconds": wall_share,
             "coalesced_with": sharing - 1,
             "launch_batch_sources": batch_sources,
-            "queue_seconds": served_at - req.enqueued_at,
+            "queue_seconds": serve_latency,
             "deadline_missed": missed,
             "exchange": exchange,
+            "trace_id": req.trace_id,
         }
         req.future._set_result(result)
 
     # ----------------------------------------------------------- telemetry
     def telemetry(self) -> dict:
+        """Pre-obs dict shape (a view over the metrics registry) plus the
+        launch/request failure counters."""
         return {
             "requests_enqueued": self.requests_enqueued,
             "requests_served": self.requests_served,
@@ -391,6 +512,8 @@ class MicroBatchScheduler:
             "dedup_hits": self.dedup_hits,
             "flushes": self.flushes,
             "deadlines_missed": self.deadlines_missed,
+            "launches_failed": self.launches_failed,
+            "requests_failed": self.requests_failed,
             "max_batch_sources": self.max_batch_sources,
         }
 

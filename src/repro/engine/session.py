@@ -39,13 +39,14 @@ measures both layouts directly for the honest wall-clock version.
 from __future__ import annotations
 
 import dataclasses
-import time
+import math
 
 import numpy as np
 
 from ..cache.sim import estimate_miss_rate, scaled_config
 from ..core.csr import Graph
 from .executor import MULTI_SOURCE, BatchedExecutor
+from .obs import Clock, MetricsRegistry, ProfilerHook, Tracer
 from .policy import PolicyDecision, ReorderPolicy
 from .registry import GraphEntry, GraphRegistry
 from .scheduler import (LABEL_KERNELS, MicroBatchScheduler, QueryFuture,
@@ -110,10 +111,16 @@ class AmortizationLedger:
         return self.reorder_seconds / per_query
 
     def as_dict(self) -> dict:
+        # strict-JSON shape: a never-amortizing reorder reports
+        # break_even_queries=None plus an explicit flag, never the
+        # non-standard Infinity literal json.dumps would otherwise emit
+        be = self.break_even_queries
+        never = math.isinf(be)
         return {**dataclasses.asdict(self),
                 "regressed": self.regressed,
                 "amortized": self.amortized,
-                "break_even_queries": self.break_even_queries}
+                "break_even_queries": None if never else be,
+                "break_even_never": never}
 
 
 class EngineSession:
@@ -129,7 +136,10 @@ class EngineSession:
                  device_budget_bytes: int | None = None,
                  num_shards: int | None = None,
                  sharded_gain_discount: float = 0.5,
-                 max_batch_sources: int | None = None):
+                 max_batch_sources: int | None = None,
+                 clock: Clock | None = None,
+                 tracer: Tracer | None = None,
+                 profiler_dir: str | None = None):
         # an explicitly supplied policy carries its own budget; the
         # session-level knob only configures the default policy
         self.policy = policy or ReorderPolicy(
@@ -142,15 +152,47 @@ class EngineSession:
         self.max_redecisions = max_redecisions
         self.sharded_gain_discount = sharded_gain_discount
         self.redecision_log: list[dict] = []
+        # observability plane (obs.py): ONE clock every latency number is
+        # read from, ONE metrics registry (adopted from the executor so
+        # backend counters land in the same namespace), ONE tracer the
+        # executor's backends share for launch-internal spans
+        self.clock = clock or Clock()
+        self.metrics_registry: MetricsRegistry = self.executor.metrics
+        self.tracer = tracer or Tracer(clock=self.clock)
+        self.executor.tracer = self.tracer
+        self.profiler = ProfilerHook(profiler_dir)
+        m = self.metrics_registry
+        self._c_registered = m.counter("engine_graphs_registered_total",
+                                       "graphs registered with the session")
+        self._c_reorders = m.counter("engine_reorders_total",
+                                     "policy decisions applied (incl. "
+                                     "registration)")
+        self._c_redecisions = m.counter("engine_redecisions_total",
+                                        "re-decisions that replaced a layout")
         self.scheduler = MicroBatchScheduler(
             self, max_batch_sources=max_batch_sources)
+
+    def metrics(self) -> MetricsRegistry:
+        """The session-wide metrics registry (``.snapshot()`` /
+        ``.to_prometheus()`` — docs/observability.md has the catalog)."""
+        return self.metrics_registry
+
+    def start_profiler(self) -> bool:
+        """Begin a ``jax.profiler`` trace (needs ``profiler_dir``)."""
+        return self.profiler.start()
+
+    def stop_profiler(self) -> bool:
+        return self.profiler.stop()
 
     # ----------------------------------------------------------- register
     def register(self, graph: Graph, graph_id: str | None = None,
                  expected_queries: int = 64) -> str:
-        entry = self.registry.add(graph, graph_id, expected_queries)
-        decision = self.policy.decide(entry.probes, expected_queries)
-        self._apply_decision(entry, decision)
+        with self.tracer.span("register", graph_id=graph_id or graph.name):
+            with self.tracer.span("probe", graph_id=graph_id or graph.name):
+                entry = self.registry.add(graph, graph_id, expected_queries)
+            decision = self.policy.decide(entry.probes, expected_queries)
+            self._apply_decision(entry, decision)
+        self._c_registered.inc()
         return entry.graph_id
 
     def _apply_decision(self, entry: GraphEntry,
@@ -166,9 +208,16 @@ class EngineSession:
         """
         entry.decision = decision
         entry.generation += 1
-        t0 = time.perf_counter()
-        perm = np.asarray(self.policy.reorder_fn(decision)(entry.graph))
-        entry.reorder_seconds = time.perf_counter() - t0
+        t0 = self.clock.now()
+        with self.tracer.span("reorder", graph_id=entry.graph_id,
+                              scheme=decision.scheme,
+                              generation=entry.generation):
+            perm = np.asarray(self.policy.reorder_fn(decision)(entry.graph))
+        entry.reorder_seconds = self.clock.now() - t0
+        self._c_reorders.inc()
+        self.metrics_registry.histogram(
+            "engine_reorder_seconds", "wall cost of applying one decision",
+            scheme=decision.scheme).observe(entry.reorder_seconds)
 
         entry.perm = perm
         inv = np.empty_like(perm)
@@ -186,9 +235,11 @@ class EngineSession:
             after = estimate_miss_rate(entry.served, cfg)
         # canonical_ids = inverse perm keeps SSSP edge weights identical to
         # the original layout, so served results match original-layout runs
-        entry.handle = self.executor.prepare(
-            entry.served, backend=decision.backend, canonical_ids=inv,
-            hot_prefix_fraction=decision.hot_prefix_fraction)
+        with self.tracer.span("prepare", graph_id=entry.graph_id,
+                              backend=decision.backend):
+            entry.handle = self.executor.prepare(
+                entry.served, backend=decision.backend, canonical_ids=inv,
+                hot_prefix_fraction=decision.hot_prefix_fraction)
         entry.backend = decision.backend
         entry.bucket_shape = entry.handle.bucket
         entry.hot_prefix_fraction = decision.hot_prefix_fraction
@@ -265,7 +316,11 @@ class EngineSession:
             entry.expected_queries = new_volume
             return None
 
-        self._apply_decision(entry, new)
+        with self.tracer.span("redecide", graph_id=entry.graph_id,
+                              trigger=trigger, old_scheme=old.scheme,
+                              new_scheme=new.scheme):
+            self._apply_decision(entry, new)
+        self._c_redecisions.inc()
         entry.expected_queries = new_volume
         entry.redecisions += 1
         event = {
@@ -337,13 +392,30 @@ class EngineSession:
         un-translated through one consistent generation. Returns the
         result already back in original id space plus the launch wall.
         """
+        tracer = self.tracer
         served_sources = None
         if kernel in MULTI_SOURCE:
-            served_sources = entry.perm[sources].astype(np.int32)
-        t0 = time.perf_counter()
-        out = np.asarray(self.executor.run(entry.handle, kernel,
-                                           served_sources))
-        wall = time.perf_counter() - t0
+            with tracer.span("translate", graph_id=entry.graph_id,
+                             kernel=kernel, generation=entry.generation):
+                served_sources = entry.perm[sources].astype(np.int32)
+        # attribute the launch to compile vs cache hit through the
+        # single backend's miss counter (sharded runners compile on
+        # first use per kernel instead — annotated by the backend)
+        misses0 = self.executor.single.cache_misses
+        t0 = self.clock.now()
+        with tracer.span("launch", graph_id=entry.graph_id, kernel=kernel,
+                         backend=entry.backend) as span_args:
+            with self.profiler.step(kernel,
+                                    step_num=self.scheduler.launches):
+                out = np.asarray(self.executor.run(entry.handle, kernel,
+                                                   served_sources))
+            if entry.backend == "single":
+                hit = self.executor.single.cache_misses == misses0
+                span_args["compile"] = "cache_hit" if hit else "compile"
+        wall = self.clock.now() - t0
+        self.metrics_registry.histogram(
+            "engine_launch_wall_seconds", "device wall per launch",
+            kernel=kernel, backend=entry.backend).observe(wall)
         # translate back: result for original vertex v lives at served
         # position perm[v]; component-label *values* (cc/ccsv) are served
         # ids and are canonicalized to min-original-id-per-component so
