@@ -19,15 +19,17 @@ def run_forced_four_devices(argv: list[str], timeout: int = 600):
 
     Genuinely distributed runs need
     ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` set *before*
-    jax initializes its backends, hence a fresh subprocess (the flag is
-    appended only if absent, so nesting under CI's 4-device step works).
-    This is the single copy of that recipe — tests/conftest.py re-exports
-    it for the distributed test legs.
+    jax initializes its backends, hence a fresh subprocess. The child's
+    ``XLA_FLAGS`` is pinned to exactly that flag — inherited values are
+    dropped, so a stray user env can't override the device count or leak
+    unrelated XLA options into the matrix. ``REPRO_EXPECT_DEVICE_COUNT``
+    tells the child's conftest to assert the forced count actually took
+    effect before any test runs. This is the single copy of that recipe —
+    tests/conftest.py re-exports it for the distributed test legs.
     """
     env = dict(os.environ)
-    flag = "--xla_force_host_platform_device_count=4"
-    if flag not in env.get("XLA_FLAGS", ""):
-        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flag).strip()
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["REPRO_EXPECT_DEVICE_COUNT"] = "4"
     env["JAX_PLATFORMS"] = "cpu"
     root = str(pathlib.Path(__file__).resolve().parent.parent)
     env["PYTHONPATH"] = os.pathsep.join(

@@ -1,6 +1,6 @@
 """Engine harness — policy decisions, amortization, and the closed loop.
 
-Seven phases:
+Phases:
 
 1. **Decisions + amortization** — for each dataset: register with the
    serving engine (policy decides a scheme from probes + volume hint),
@@ -29,7 +29,11 @@ Seven phases:
    the sharded traversals with and without ``hot_prefix_fraction`` and
    report per-step exchanged bytes, the savings fraction, and the static
    prefix hit rate — results must stay bit-identical either way.
-7. **Scheduler throughput** — a 16-request multi-source burst on one
+7. **Fused traversal loop** — same 4-device mesh: the fused on-device
+   ``XLA::While`` drivers vs the host step loop, per kernel — dispatches
+   per query (O(steps) -> O(1)), post-compile wall/step, bit-identical
+   results (the ROADMAP item 1 receipt).
+8. **Scheduler throughput** — a 16-request multi-source burst on one
    graph served two ways: sequential blocking ``submit`` (one device
    launch per request) vs the request plane (``enqueue`` + ``drain``,
    requests coalesced into shared vmapped launches). Reports device
@@ -479,8 +483,85 @@ def _phase_observability(scale, requests: int = 64):
     return out
 
 
+def _phase_fused(scale):
+    """4 forced host devices: the fused on-device traversal loop vs the
+    host step loop, per kernel — dispatches per query (O(steps) -> O(1)),
+    post-compile wall clock and wall/step, at bit-identical results.
+    This is the ROADMAP item 1 receipt: the engine stops being
+    dispatch-bound before the reorder's locality gain can show up."""
+    n = max(2000, int(20_000 * scale))
+    prog = textwrap.dedent(f"""
+        import json, time
+        import numpy as np
+        import jax
+        assert jax.device_count() == 4, jax.devices()
+        from repro.core.dist import (ExchangeStats, make_distributed_bc,
+                                     make_distributed_bfs,
+                                     make_distributed_cc,
+                                     make_distributed_pagerank,
+                                     make_distributed_sssp)
+        from repro.core.generators import powerlaw_community
+
+        g = powerlaw_community({n}, avg_degree=10.0, seed=31)
+        mesh = jax.make_mesh((4,), ("data",))
+        srcs = np.arange(4) * (g.num_vertices // 5)
+
+        def build(kernel, stats, fused):
+            if kernel == "pr":
+                return make_distributed_pagerank(g, mesh, stats=stats,
+                                                 fused=fused)[0]
+            if kernel == "bc":
+                return make_distributed_bc(g, mesh, stats=stats,
+                                           fused=fused)
+            f = dict(bfs=make_distributed_bfs, sssp=make_distributed_sssp,
+                     cc=make_distributed_cc)[kernel]
+            return f(g, mesh, hot_prefix_fraction=0.15, cold_every=5,
+                     stats=stats, fused=fused)
+
+        out = {{}}
+        for kernel in ("bfs", "sssp", "cc", "pr", "bc"):
+            res, row = {{}}, {{}}
+            for mode in ("host", "fused"):
+                stats = ExchangeStats()
+                run = build(kernel, stats, mode == "fused")
+                args = (srcs,) if kernel in ("bfs", "sssp", "bc") else ()
+                jax.block_until_ready(run(*args))   # compile + warm
+                before = stats.snapshot()
+                t0 = time.perf_counter()
+                res[mode] = np.asarray(jax.block_until_ready(run(*args)))
+                wall = time.perf_counter() - t0
+                d = stats.delta(before)
+                row[mode] = {{
+                    "wall_seconds": round(wall, 5),
+                    "steps": d.steps,
+                    "dispatches_per_query": d.dispatches,
+                    "wall_per_step_ms": round(
+                        wall * 1e3 / max(d.steps, 1), 4),
+                }}
+            row["bit_identical"] = bool(np.array_equal(res["host"],
+                                                       res["fused"]))
+            row["single_xla_while"] = \\
+                row["fused"]["dispatches_per_query"] == 1
+            out[kernel] = row
+        print("RESULT " + json.dumps(out))
+    """)
+    out = _run_four_devices(prog)
+    if "error" in out:
+        print(f"[engine] fused phase FAILED:\n{out['error']}", flush=True)
+        return out
+    for kernel, r in out.items():
+        print(f"[engine] fused {kernel}: dispatches/query "
+              f"{r['host']['dispatches_per_query']} -> "
+              f"{r['fused']['dispatches_per_query']}, wall/step "
+              f"{r['host']['wall_per_step_ms']:.2f}ms -> "
+              f"{r['fused']['wall_per_step_ms']:.2f}ms "
+              f"({r['host']['steps']} steps, bit-identical="
+              f"{r['bit_identical']})", flush=True)
+    return out
+
+
 PHASES = ("decisions", "redecision", "calibration", "bucketing", "sharded",
-          "hot_prefix", "scheduler", "observability")
+          "hot_prefix", "fused", "scheduler", "observability")
 
 
 def parse_phases(value: str | None) -> list[str]:
@@ -526,6 +607,8 @@ def run(scale: float = 0.5, batch: int = 8, repeats: int = 5,
         out["sharded"] = _phase_sharded(scale)
     if "hot_prefix" in todo:
         out["hot_prefix"] = _phase_hot_prefix(scale)
+    if "fused" in todo:
+        out["fused"] = _phase_fused(scale)
     if "scheduler" in todo:
         out["scheduler"] = _phase_scheduler(scale)
     if "observability" in todo:

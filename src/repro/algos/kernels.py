@@ -114,6 +114,68 @@ def _pagerank(g: GraphArrays, num_iters, damping, tol):
     return r
 
 
+# --------------------------------------------------- PageRank via Pallas SpMV
+def pagerank_spmv(g: GraphArrays, spmv_src: jnp.ndarray,
+                  spmv_dst: jnp.ndarray, spmv_val: jnp.ndarray,
+                  num_iters: int = 20, damping: float = 0.85,
+                  tol: float = 1e-6, *, blocks_per_tile: int,
+                  num_tiles: int, n_pad: int,
+                  interpret: bool = True) -> jnp.ndarray:
+    """`_pagerank` with the pull relaxation routed through the Pallas
+    CSR-SpMV kernel (kernels/csr_spmv) inside the same ``while_loop``.
+
+    ``spmv_src``/``spmv_dst``/``spmv_val`` are the graph's in-CSR edge
+    stream pre-packed by `kernels.csr_spmv.pack_edges` into dst-tiled
+    blocks — after LOrder the hot-prefix rows land in the first tiles and
+    the VMEM-resident property vector's hot slab stays resident across
+    the edge stream. Sentinel edges of bucketed uploads carry
+    ``spmv_val == 0`` so they contribute nothing; the remaining mask
+    handling is identical to `_pagerank`, and results agree with it to
+    float tolerance (the tile-blocked summation order differs).
+
+    Not jitted here: the engine wraps it per pack shape
+    (``blocks_per_tile``/``num_tiles``/``n_pad`` are static arguments of
+    the pallas_call), so its compile-cache keys stay pack-aware.
+    """
+    from ..kernels.csr_spmv.csr_spmv import csr_spmv_pallas
+
+    n = g.num_vertices
+    valid = g.vertex_valid
+    if valid is None:
+        n_real = jnp.float32(n)
+        dangling_mask = g.out_degree == 0
+    else:
+        n_real = valid.sum().astype(jnp.float32)
+        dangling_mask = (g.out_degree == 0) & valid
+    base = (1.0 - damping) / n_real
+    outdeg = jnp.maximum(g.out_degree, 1).astype(jnp.float32)
+
+    def body(state):
+        r, _, it = state
+        contrib = r / outdeg
+        summed = csr_spmv_pallas(
+            spmv_src, spmv_dst, spmv_val, contrib,
+            blocks_per_tile=blocks_per_tile, num_tiles=num_tiles,
+            n_pad=n_pad, interpret=interpret)
+        dangling = jnp.where(dangling_mask, r, 0.0).sum()
+        r_new = base + damping * (summed + dangling / n_real)
+        if valid is not None:
+            r_new = jnp.where(valid, r_new, 0.0)
+        err = jnp.abs(r_new - r).sum()
+        return r_new, err, it + 1
+
+    def cond(state):
+        _, err, it = state
+        return (it < num_iters) & (err > tol)
+
+    r0 = jnp.ones((n,), jnp.float32) / n_real
+    if valid is not None:
+        r0 = jnp.where(valid, r0, 0.0)
+    r, _, _ = lax.while_loop(cond, body,
+                             (r0, jnp.float32(jnp.inf), jnp.int32(0)))
+    return r
+
+
 # ------------------------------------------------- Connected Components (LP)
 @jax.jit
 def cc_labelprop(g: GraphArrays) -> jnp.ndarray:

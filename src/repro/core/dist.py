@@ -25,6 +25,18 @@ the returned fixed point is exactly the single-device result. PageRank
 and BC are level/iteration-synchronous and always exchange in full.
 `ExchangeStats` accounts the per-step exchanged bytes either way.
 
+**Fused drivers** (``fused=True``, the default): the whole traversal —
+step loop, per-step collective, hot/cold cadence and the convergence
+test — runs as one ``jax.lax.while_loop`` inside a single
+``shard_map``-ped jit, so an entire BFS/SSSP/CC/PR/BC run compiles to
+one ``XLA::While`` and costs **one** host→device dispatch instead of
+one per step. Step counts come back in the loop carry and are replayed
+into `ExchangeStats` on the host after the launch, so per-step byte
+accounting and trace spans are unchanged. ``fused=False`` keeps the
+original host-orchestrated loop (one jitted step per iteration) as the
+differential reference — tests/test_fused_loops.py asserts the two are
+bit-identical for all six kernels.
+
 All six serving kernels have distributed entry points here: PR
 (`make_distributed_pagerank`), multi-source BFS/SSSP
 (`make_distributed_bfs` / `make_distributed_sssp`), CC by min-label
@@ -53,8 +65,10 @@ from .csr import Graph
 def _shard_map_norep(f, mesh, in_specs, out_specs):
     """shard_map with the replication check off — for steps returning an
     all-gathered (hence genuinely replicated) array under a P(None, ...)
-    out_spec, which the static checker cannot infer. The kwarg was
-    renamed check_rep -> check_vma across jax versions."""
+    out_spec, which the static checker cannot infer. The fused drivers
+    need it too: their while-carries mix sharded state with replicated
+    caches/counters. The kwarg was renamed check_rep -> check_vma across
+    jax versions."""
     try:
         return _shard_map(f, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_rep=False)
@@ -116,12 +130,16 @@ def partition_edges(g: Graph, num_shards: int, edge_values=None):
 class ExchangeStats:
     """Per-step collective payload accounting for the sharded kernels.
 
-    A "step" is one sharded launch that all-gathers vertex property
+    A "step" is one traversal iteration that all-gathers vertex property
     state. Bytes count what one device *receives* per step:
     ``(num_shards - 1) * slab_bytes`` — the remote share of the gathered
     array. ``bytes_full_equivalent`` books what the same step would have
     cost with a full exchange, so the hot-prefix saving is
     ``1 - bytes_exchanged / bytes_full_equivalent``.
+
+    ``dispatches`` counts host→device launches: with host-loop drivers
+    that is one per step (plus prep launches), with fused drivers one per
+    run — the collapse the fused benchmark phase demonstrates.
     """
 
     steps_full: int = 0
@@ -129,10 +147,12 @@ class ExchangeStats:
     bytes_full: int = 0
     bytes_hot: int = 0
     bytes_full_equivalent: int = 0
+    dispatches: int = 0
     # optional per-step observer ``(mode, nbytes, full_nbytes) -> None``:
     # the engine's sharded backend points this at its tracer while a run
-    # is live, so every host-loop exchange becomes one trace span
-    # (engine/obs.py) without dist growing an engine dependency
+    # is live, so every exchange becomes one trace span (engine/obs.py)
+    # without dist growing an engine dependency. Fused runs replay their
+    # device-side step counts through here right after the launch.
     span_sink: object = dataclasses.field(default=None, compare=False,
                                           repr=False)
 
@@ -150,10 +170,23 @@ class ExchangeStats:
         if self.span_sink is not None:
             self.span_sink("hot", nbytes, full_nbytes)
 
+    def record_dispatch(self, n: int = 1) -> None:
+        self.dispatches += n
+
+    def record_run(self, steps_full: int, steps_hot: int,
+                   full_nbytes: int, hot_nbytes: int) -> None:
+        """Replay a fused run's device-side step counts one step at a
+        time, so per-step accounting (and the span_sink) see the same
+        sequence of records the host-loop driver would have produced."""
+        for _ in range(int(steps_full)):
+            self.record_full(full_nbytes)
+        for _ in range(int(steps_hot)):
+            self.record_hot(hot_nbytes, full_nbytes)
+
     def snapshot(self) -> tuple:
         """Counter tuple for per-run attribution (see ``delta``)."""
         return (self.steps_full, self.steps_hot, self.bytes_full,
-                self.bytes_hot, self.bytes_full_equivalent)
+                self.bytes_hot, self.bytes_full_equivalent, self.dispatches)
 
     def delta(self, since: tuple) -> "ExchangeStats":
         """Stats accumulated since ``snapshot()`` — the exchange cost of
@@ -192,13 +225,21 @@ class ExchangeStats:
             "bytes_full_equivalent": self.bytes_full_equivalent,
             "bytes_per_step": round(self.bytes_per_step, 1),
             "savings_fraction": round(self.savings_fraction, 4),
+            "dispatches": self.dispatches,
         }
 
 
 def make_distributed_pagerank(g: Graph, mesh: Mesh, axis: str = "data",
                               damping: float = 0.85, num_iters: int = 20,
-                              stats: ExchangeStats | None = None):
-    """Returns (step_fn, initial_rank) running PR over `axis` of `mesh`."""
+                              stats: ExchangeStats | None = None,
+                              fused: bool = True):
+    """Returns (step_fn, initial_rank) running PR over `axis` of `mesh`.
+
+    ``fused=True`` runs all ``num_iters`` power iterations inside one
+    ``lax.fori_loop`` under a single shard_map'd jit (one dispatch);
+    ``fused=False`` is the host-loop reference (one dispatch per
+    iteration).
+    """
     num_shards = mesh.shape[axis]
     s_pad, d_pad, valid, per = partition_edges(g, num_shards)
     n = g.num_vertices
@@ -217,7 +258,7 @@ def make_distributed_pagerank(g: Graph, mesh: Mesh, axis: str = "data",
     deg_sh = jax.device_put(outdeg_pad, vspec)
     dang_sh = jax.device_put(dangling_pad, vspec)
 
-    def step(rank, src_e, dst_e, val_e, deg, dang):
+    def _iterate(rank, src_e, dst_e, val_e, deg, dang):
         # rank: (per,) local shard.  all-gather the full property array —
         # the collective whose *useful* payload LOrder concentrates.
         full = jax.lax.all_gather(rank, axis, tiled=True)       # (n_pad,)
@@ -226,14 +267,28 @@ def make_distributed_pagerank(g: Graph, mesh: Mesh, axis: str = "data",
         summed = jax.ops.segment_sum(contrib, dst_e[0], num_segments=per)
         # dangling mass redistributed uniformly (GAP semantics)
         dangling = jax.lax.psum(jnp.sum(rank * dang), axis)
-        out = (1.0 - damping) / n + damping * (summed + dangling / n)
-        return out[None]
+        return (1.0 - damping) / n + damping * (summed + dangling / n)
+
+    def step(rank, src_e, dst_e, val_e, deg, dang):
+        return _iterate(rank, src_e, dst_e, val_e, deg, dang)[None]
 
     sharded_step = jax.jit(_shard_map(
         step, mesh=mesh,
         in_specs=(P(axis), P(axis, None), P(axis, None), P(axis, None),
                   P(axis), P(axis)),
         out_specs=P(axis, None),
+    ))
+
+    def fused_run_fn(rank, src_e, dst_e, val_e, deg, dang):
+        def body(_, r):
+            return _iterate(r, src_e, dst_e, val_e, deg, dang)
+        return jax.lax.fori_loop(0, num_iters, body, rank)
+
+    sharded_fused = jax.jit(_shard_map_norep(
+        fused_run_fn, mesh=mesh,
+        in_specs=(P(axis), P(axis, None), P(axis, None), P(axis, None),
+                  P(axis), P(axis)),
+        out_specs=P(axis),
     ))
 
     # PR's power iteration is synchronous: every step needs a consistent
@@ -244,10 +299,17 @@ def make_distributed_pagerank(g: Graph, mesh: Mesh, axis: str = "data",
     def run(rank0=None):
         r = rank0 if rank0 is not None else jax.device_put(
             np.full(n_pad, 1.0 / n, np.float32), vspec)
+        if fused:
+            r = sharded_fused(r, s_sh, d_sh, v_sh, deg_sh, dang_sh)
+            if stats is not None:
+                stats.record_dispatch()
+                stats.record_run(num_iters, 0, iter_bytes, 0)
+            return r[:n]
         for _ in range(num_iters):
             r = sharded_step(r, s_sh, d_sh, v_sh, deg_sh,
                              dang_sh).reshape(n_pad)
             if stats is not None:
+                stats.record_dispatch()
                 stats.record_full(iter_bytes)
         return r[:n]
 
@@ -264,10 +326,10 @@ def lower_distributed_pagerank(g: Graph, mesh: Mesh, axis: str = "data"):
 #
 # Serving parity with the single-device engine: batched BFS / SSSP / CC /
 # BC where the (S, V) property matrix is sharded along the *vertex* axis
-# and each level/relaxation step all-gathers it. The outer iteration is a
-# host loop with a device-side convergence flag (same structure as the PR
-# driver above) — one sharded launch per level, bounded by eccentricity
-# (BFS) or V (Bellman-Ford).
+# and each level/relaxation step all-gathers it. The outer iteration is
+# either a single on-device `lax.while_loop` (fused, one launch per run)
+# or a host loop with a device-side convergence flag (the reference) —
+# bounded by eccentricity (BFS) or V (Bellman-Ford) either way.
 
 _INF_I32 = np.int32(2**31 - 1)
 
@@ -282,7 +344,8 @@ def _make_minrelax_runner(coo_src, coo_dst, edge_w, num_vertices: int,
                           mesh: Mesh, axis: str,
                           hot_prefix_fraction: float | None = None,
                           cold_every: int = 4,
-                          stats: ExchangeStats | None = None):
+                          stats: ExchangeStats | None = None,
+                          fused: bool = True):
     """Generic monotone min-relaxation to a fixed point over shard_map.
 
     State is an int32 ``(S, n_pad)`` matrix sharded on the vertex axis;
@@ -295,6 +358,12 @@ def _make_minrelax_runner(coo_src, coo_dst, edge_w, num_vertices: int,
     relaxation, never commit a wrong one — and the loop terminates only
     when a **full**-exchange step changes nothing, i.e. at the exact
     global fixed point.
+
+    ``fused=True`` puts the whole loop — including the full/hot cadence
+    (``lax.cond`` over the two gather shapes) and the termination test —
+    inside one ``lax.while_loop`` under a single shard_map'd jit: one
+    XLA::While, one dispatch per run. The step sequence is identical to
+    the ``fused=False`` host loop, so results are bit-identical.
 
     Returns ``run(state0) -> (S, n_pad) final state`` with
     ``run.h_local``, ``run.per``, ``run.hot_prefix_fraction`` and the
@@ -309,6 +378,10 @@ def _make_minrelax_runner(coo_src, coo_dst, edge_w, num_vertices: int,
     n_pad = per * num_shards
     f = hot_prefix_fraction
     h_local = per if f is None else min(per, max(1, int(np.ceil(f * per))))
+    # distance info crosses at least one hop per full exchange even in
+    # the worst case, so the fixed point is reached well inside
+    # V * cold_every steps; the bound is a backstop, not the driver
+    max_iters = num_vertices * cold_every + cold_every + 2
 
     espec = NamedSharding(mesh, P(axis, None))
     s_sh = jax.device_put(s_pad, espec)
@@ -327,8 +400,22 @@ def _make_minrelax_runner(coo_src, coo_dst, edge_w, num_vertices: int,
         changed = jax.lax.psum((new != state).any().astype(jnp.int32), axis)
         return new, changed > 0
 
+    def _gather_full(state):
+        return jax.lax.all_gather(state, axis, axis=1, tiled=True)
+
+    def _hot_view(state, cache):
+        # gather only the hot prefix of every shard's slice ...
+        fresh = jax.lax.all_gather(state[:, :h_local], axis,
+                                   axis=0, tiled=False)  # (shards, S, h)
+        view = cache.reshape(cache.shape[0], num_shards, per)
+        view = view.at[:, :, :h_local].set(jnp.transpose(fresh, (1, 0, 2)))
+        # ... and read the shard's own slice live, not from the cache
+        view = jax.lax.dynamic_update_slice_in_dim(
+            view, state[:, None, :], jax.lax.axis_index(axis), axis=1)
+        return view.reshape(cache.shape[0], n_pad)
+
     def step_full(state, src_e, dst_e, val_e, w_e):
-        full = jax.lax.all_gather(state, axis, axis=1, tiled=True)
+        full = _gather_full(state)
         new, changed = _relax(state, full, src_e, dst_e, val_e, w_e)
         # the gathered view doubles as the cold cache until the next full
         # exchange; identical on every shard, hence the replicated spec
@@ -342,16 +429,8 @@ def _make_minrelax_runner(coo_src, coo_dst, edge_w, num_vertices: int,
     ))
 
     def step_hot(state, cache, src_e, dst_e, val_e, w_e):
-        # gather only the hot prefix of every shard's slice ...
-        fresh = jax.lax.all_gather(state[:, :h_local], axis,
-                                   axis=0, tiled=False)  # (shards, S, h)
-        view = cache.reshape(cache.shape[0], num_shards, per)
-        view = view.at[:, :, :h_local].set(jnp.transpose(fresh, (1, 0, 2)))
-        # ... and read the shard's own slice live, not from the cache
-        view = jax.lax.dynamic_update_slice_in_dim(
-            view, state[:, None, :], jax.lax.axis_index(axis), axis=1)
-        view = view.reshape(cache.shape[0], n_pad)
-        return _relax(state, view, src_e, dst_e, val_e, w_e)
+        return _relax(state, _hot_view(state, cache),
+                      src_e, dst_e, val_e, w_e)
 
     sharded_hot = jax.jit(_shard_map(
         step_hot, mesh=mesh,
@@ -360,21 +439,88 @@ def _make_minrelax_runner(coo_src, coo_dst, edge_w, num_vertices: int,
         out_specs=(P(None, axis), P()),
     ))
 
+    # ---------------------------------------------------- fused driver
+    def fused_fn(state, src_e, dst_e, val_e, w_e):
+        # carry: (state, cache, it, full_due, done, steps_full, steps_hot)
+        # — the exact control variables of the host loop below, moved
+        # into the While carry so the cadence and the termination test
+        # compile into the loop. `is_full`/`done` derive from psum'd
+        # flags, hence replicated, so lax.cond may hold a collective in
+        # each branch. With no hot prefix configured the cadence is
+        # static — every step is full — so that case compiles without
+        # the cond or the (S, n_pad) cache in the carry.
+        if f is None:
+            def cond(c):
+                _, done, it, _ = c
+                return ~done & (it < max_iters)
+
+            def body(c):
+                st, _, it, sf = c
+                new, _, changed = step_full(st, src_e, dst_e, val_e, w_e)
+                return new, ~changed, it + 1, sf + 1
+
+            state, _, _, sf = jax.lax.while_loop(
+                cond, body,
+                (state, jnp.bool_(False), jnp.int32(0), jnp.int32(0)))
+            return state, sf, jnp.int32(0)
+
+        s_rows = state.shape[0]
+        cache0 = jnp.zeros((s_rows, n_pad), jnp.int32)
+
+        def full_branch(st, cache):
+            new, full, changed = step_full(st, src_e, dst_e, val_e, w_e)
+            return new, full, changed
+
+        def hot_branch(st, cache):
+            new, changed = step_hot(st, cache, src_e, dst_e, val_e, w_e)
+            return new, cache, changed
+
+        def cond(c):
+            _, _, it, _, done, _, _ = c
+            return ~done & (it < max_iters)
+
+        def body(c):
+            st, cache, it, full_due, _, sf, sh = c
+            is_full = full_due | (it % cold_every == 0)
+            st, cache, changed = jax.lax.cond(
+                is_full, full_branch, hot_branch, st, cache)
+            done = is_full & ~changed
+            full_due = jnp.where(is_full, False, ~changed)
+            return (st, cache, it + 1, full_due, done,
+                    sf + is_full.astype(jnp.int32),
+                    sh + (~is_full).astype(jnp.int32))
+
+        init = (state, cache0, jnp.int32(0), jnp.bool_(True),
+                jnp.bool_(False), jnp.int32(0), jnp.int32(0))
+        state, _, _, _, _, sf, sh = jax.lax.while_loop(cond, body, init)
+        return state, sf, sh
+
+    sharded_fused = jax.jit(_shard_map_norep(
+        fused_fn, mesh=mesh,
+        in_specs=(P(None, axis), P(axis, None), P(axis, None),
+                  P(axis, None), P(axis, None)),
+        out_specs=(P(None, axis), P(), P()),
+    ))
+
     def run(state0):
         s = int(np.asarray(state0).shape[0])
         state = _put_state(np.asarray(state0, np.int32), mesh, axis)
         full_b = (num_shards - 1) * per * 4 * s
         hot_b = (num_shards - 1) * h_local * 4 * s
+        if fused:
+            state, sf, sh = sharded_fused(state, s_sh, d_sh, v_sh, w_sh)
+            if stats is not None:
+                stats.record_dispatch()
+                stats.record_run(int(sf), int(sh), full_b, hot_b)
+            return state
         cache = None
         full_due = True
-        # distance info crosses at least one hop per full exchange even
-        # in the worst case, so the fixed point is reached well inside
-        # V * cold_every steps; the bound is a backstop, not the driver
-        for it in range(num_vertices * cold_every + cold_every + 2):
+        for it in range(max_iters):
             if f is None or full_due or it % cold_every == 0:
                 state, cache, changed = sharded_full(state, s_sh, d_sh,
                                                      v_sh, w_sh)
                 if stats is not None:
+                    stats.record_dispatch()
                     stats.record_full(full_b)
                 full_due = False
                 if not bool(changed):
@@ -383,6 +529,7 @@ def _make_minrelax_runner(coo_src, coo_dst, edge_w, num_vertices: int,
                 state, changed = sharded_hot(state, cache, s_sh, d_sh,
                                              v_sh, w_sh)
                 if stats is not None:
+                    stats.record_dispatch()
                     stats.record_hot(hot_b, full_b)
                 if not bool(changed):
                     full_due = True  # locally quiesced: verify in full
@@ -407,7 +554,7 @@ def _copy_prefix_attrs(run, relax) -> None:
 
 # ------------------------------------------------------------------- BFS
 def _make_bfs_frontier(g: Graph, mesh: Mesh, axis: str,
-                       stats: ExchangeStats | None):
+                       stats: ExchangeStats | None, fused: bool = True):
     """Level-synchronous frontier BFS; returns run(sources) -> sharded
     (S, n_pad) depth (the full-exchange path, also BC's forward pass)."""
     num_shards = mesh.shape[axis]
@@ -427,8 +574,9 @@ def _make_bfs_frontier(g: Graph, mesh: Mesh, axis: str,
         )(active)
         new = touched & (depth < 0)
         depth = jnp.where(new, level + 1, depth)
-        # replicated scalar per the P() out_spec: the host loop reads one
-        # flag instead of reducing the whole sharded frontier each level
+        # replicated scalar per the P() out_spec: the loop predicate (or
+        # the host loop) reads one flag instead of reducing the whole
+        # sharded frontier each level
         alive = jax.lax.psum(new.any().astype(jnp.int32), axis)
         return depth, new, alive > 0
 
@@ -437,6 +585,29 @@ def _make_bfs_frontier(g: Graph, mesh: Mesh, axis: str,
         in_specs=(P(None, axis), P(None, axis), P(),
                   P(axis, None), P(axis, None), P(axis, None)),
         out_specs=(P(None, axis), P(None, axis), P()),
+    ))
+
+    def fused_fn(depth, front, src_e, dst_e, val_e):
+        def cond(c):
+            _, _, level, alive = c
+            return alive & (level < n)
+
+        def body(c):
+            depth, front, level, _ = c
+            depth, front, alive = step(depth, front, level,
+                                       src_e, dst_e, val_e)
+            return depth, front, level + 1, alive
+
+        # do-while: the initial frontier is never empty (sources exist)
+        depth, _, steps, _ = jax.lax.while_loop(
+            cond, body, (depth, front, jnp.int32(0), jnp.bool_(True)))
+        return depth, steps
+
+    sharded_fused = jax.jit(_shard_map_norep(
+        fused_fn, mesh=mesh,
+        in_specs=(P(None, axis), P(None, axis),
+                  P(axis, None), P(axis, None), P(axis, None)),
+        out_specs=(P(None, axis), P()),
     ))
 
     def run_full(sources):
@@ -449,28 +620,38 @@ def _make_bfs_frontier(g: Graph, mesh: Mesh, axis: str,
         depth = _put_state(depth0, mesh, axis)
         front = _put_state(front0, mesh, axis)
         level_bytes = (num_shards - 1) * per * 1 * s  # bool frontier
+        if fused:
+            depth, steps = sharded_fused(depth, front, s_sh, d_sh, v_sh)
+            if stats is not None:
+                stats.record_dispatch()
+                stats.record_run(int(steps), 0, level_bytes, 0)
+            return depth
         # do-while: the initial frontier is never empty (sources exist)
         for level in range(n):
             depth, front, alive = sharded_step(depth, front,
                                                jnp.int32(level),
                                                s_sh, d_sh, v_sh)
             if stats is not None:
+                stats.record_dispatch()
                 stats.record_full(level_bytes)
             if not bool(alive):
                 break
         return depth
 
     run_full.per = per
-    # the dst-partitioned edge uploads, reusable by passes that share the
-    # same partition (BC's forward σ pass) — one partition, one upload
+    # the dst-partitioned edge uploads and the raw per-shard step body,
+    # reusable by passes that share the same partition (BC's forward σ
+    # pass, and BC's fully-fused driver) — one partition, one upload
     run_full.edge_shards = (s_sh, d_sh, v_sh)
+    run_full.step_fn = step
     return run_full
 
 
 def make_distributed_bfs(g: Graph, mesh: Mesh, axis: str = "data",
                          hot_prefix_fraction: float | None = None,
                          cold_every: int = 4,
-                         stats: ExchangeStats | None = None):
+                         stats: ExchangeStats | None = None,
+                         fused: bool = True):
     """Returns run(sources) -> (S, V) BFS depths over `axis` of `mesh`.
 
     With ``hot_prefix_fraction`` set, BFS runs as unit-weight Bellman-Ford
@@ -481,7 +662,7 @@ def make_distributed_bfs(g: Graph, mesh: Mesh, axis: str = "data",
     """
     n = g.num_vertices
     if hot_prefix_fraction is None:
-        run_full = _make_bfs_frontier(g, mesh, axis, stats)
+        run_full = _make_bfs_frontier(g, mesh, axis, stats, fused=fused)
 
         def run(sources):
             return run_full(sources)[:, :n]
@@ -493,7 +674,8 @@ def make_distributed_bfs(g: Graph, mesh: Mesh, axis: str = "data",
 
     unit = np.ones(g.num_edges, np.int32)
     relax = _make_minrelax_runner(g.edge_src, g.indices, unit, n, mesh, axis,
-                                  hot_prefix_fraction, cold_every, stats)
+                                  hot_prefix_fraction, cold_every, stats,
+                                  fused=fused)
     n_pad = relax.per * mesh.shape[axis]
 
     def run(sources):
@@ -511,84 +693,35 @@ def make_distributed_sssp(g: Graph, mesh: Mesh, axis: str = "data",
                           canonical_ids=None,
                           hot_prefix_fraction: float | None = None,
                           cold_every: int = 4,
-                          stats: ExchangeStats | None = None):
+                          stats: ExchangeStats | None = None,
+                          fused: bool = True):
     """Returns run(sources) -> (S, V) Bellman-Ford distances.
 
     Weights are the engine's canonical per-edge hash
     (`algos.graph_arrays.edge_weights`, relabel-invariant through
     ``canonical_ids``), so sharded distances match the single-device
     executor exactly — with or without the hot-prefix exchange
-    (Bellman-Ford is monotone, see `_make_minrelax_runner`).
+    (Bellman-Ford is monotone, see `_make_minrelax_runner`). Both the
+    full-exchange and hot-prefix paths run through the min-relaxation
+    driver (with ``hot_prefix_fraction=None`` every step is a full
+    exchange), so SSSP gets the fused single-dispatch loop for free.
     """
     from ..algos.graph_arrays import edge_weights
 
     n = g.num_vertices
     w = edge_weights(g.edge_src, g.indices, canonical_ids)
-
-    if hot_prefix_fraction is not None:
-        relax = _make_minrelax_runner(g.edge_src, g.indices, w, n, mesh,
-                                      axis, hot_prefix_fraction, cold_every,
-                                      stats)
-        n_pad = relax.per * mesh.shape[axis]
-
-        def run(sources):
-            srcs = np.atleast_1d(np.asarray(sources, np.int64))
-            state0 = np.full((srcs.size, n_pad), _INF_I32, np.int32)
-            state0[np.arange(srcs.size), srcs] = 0
-            return relax(state0)[:, :n]
-
-        _copy_prefix_attrs(run, relax)
-        return run
-
-    num_shards = mesh.shape[axis]
-    s_pad, d_pad, valid, per, w_pad = partition_edges(g, num_shards,
-                                                      edge_values=w)
-    n_pad = per * num_shards
-    espec = NamedSharding(mesh, P(axis, None))
-    s_sh = jax.device_put(s_pad, espec)
-    d_sh = jax.device_put(d_pad, espec)
-    v_sh = jax.device_put(valid, espec)
-    w_sh = jax.device_put(w_pad.astype(np.int32), espec)
-
-    def step(dist, src_e, dst_e, val_e, w_e):
-        full = jax.lax.all_gather(dist, axis, axis=1, tiled=True)
-        du = full[:, src_e[0]]                                # (S, e_local)
-        cand = jnp.where(val_e[0] & (du != _INF_I32),
-                         du + w_e[0], _INF_I32)
-        relaxed = jax.vmap(
-            lambda c: jax.ops.segment_min(c, dst_e[0], num_segments=per)
-        )(cand)
-        new = jnp.minimum(dist, relaxed)
-        # replicated convergence flag: psum makes it identical on every
-        # shard, as the P() out_spec requires
-        changed = jax.lax.psum((new != dist).any().astype(jnp.int32), axis)
-        return new, changed > 0
-
-    sharded_step = jax.jit(_shard_map(
-        step, mesh=mesh,
-        in_specs=(P(None, axis), P(axis, None), P(axis, None),
-                  P(axis, None), P(axis, None)),
-        out_specs=(P(None, axis), P()),
-    ))
+    relax = _make_minrelax_runner(g.edge_src, g.indices, w, n, mesh, axis,
+                                  hot_prefix_fraction, cold_every, stats,
+                                  fused=fused)
+    n_pad = relax.per * mesh.shape[axis]
 
     def run(sources):
         srcs = np.atleast_1d(np.asarray(sources, np.int64))
-        s = srcs.size
-        dist0 = np.full((s, n_pad), _INF_I32, np.int32)
-        dist0[np.arange(s), srcs] = 0
-        dist = _put_state(dist0, mesh, axis)
-        step_bytes = (num_shards - 1) * per * 4 * s
-        for _ in range(n):
-            dist, changed = sharded_step(dist, s_sh, d_sh, v_sh, w_sh)
-            if stats is not None:
-                stats.record_full(step_bytes)
-            if not bool(changed):
-                break
-        return dist[:, :n]
+        state0 = np.full((srcs.size, n_pad), _INF_I32, np.int32)
+        state0[np.arange(srcs.size), srcs] = 0
+        return relax(state0)[:, :n]
 
-    run.prefix_hit_rate, run.hot_prefix_fraction = 1.0, None
-    run.per = per
-    run.h_local = per
+    _copy_prefix_attrs(run, relax)
     return run
 
 
@@ -596,7 +729,8 @@ def make_distributed_sssp(g: Graph, mesh: Mesh, axis: str = "data",
 def make_distributed_cc(g: Graph, mesh: Mesh, axis: str = "data",
                         hot_prefix_fraction: float | None = None,
                         cold_every: int = 4,
-                        stats: ExchangeStats | None = None):
+                        stats: ExchangeStats | None = None,
+                        fused: bool = True):
     """Returns run() -> (V,) min-label CC over the symmetrized edges.
 
     Min-label propagation is a monotone min-relaxation (weight 0 over the
@@ -611,7 +745,7 @@ def make_distributed_cc(g: Graph, mesh: Mesh, axis: str = "data",
     dst = np.concatenate([np.asarray(g.indices), np.asarray(g.edge_src)])
     relax = _make_minrelax_runner(src, dst, np.zeros(src.size, np.int32), n,
                                   mesh, axis, hot_prefix_fraction,
-                                  cold_every, stats)
+                                  cold_every, stats, fused=fused)
     n_pad = relax.per * mesh.shape[axis]
 
     def run():
@@ -624,7 +758,8 @@ def make_distributed_cc(g: Graph, mesh: Mesh, axis: str = "data",
 
 # -------------------------------------------- Betweenness Centrality (BC)
 def make_distributed_bc(g: Graph, mesh: Mesh, axis: str = "data",
-                        stats: ExchangeStats | None = None):
+                        stats: ExchangeStats | None = None,
+                        fused: bool = True):
     """Returns run(sources) -> (S, V) per-source Brandes dependencies.
 
     Three sharded passes, mirroring `algos.kernels.bc_single_source`:
@@ -638,6 +773,12 @@ def make_distributed_bc(g: Graph, mesh: Mesh, axis: str = "data",
        backward pass scatters to src, so dst-partitioned edges would
        need a cross-shard scatter).
 
+    ``fused=True`` compiles all three passes — BFS While, σ While, δ
+    While, with ``max_level`` carried as a traced pmax instead of a host
+    round-trip — into **one** shard_map'd jit: a whole multi-source BC
+    run is a single dispatch. ``fused=False`` keeps the per-level host
+    loops as the reference.
+
     Level-synchronous float accumulation: no hot-prefix variant (the
     per-level sums need a consistent view), and results are numerically
     close — not bit-identical — to the single-device kernel because the
@@ -645,7 +786,7 @@ def make_distributed_bc(g: Graph, mesh: Mesh, axis: str = "data",
     """
     num_shards = mesh.shape[axis]
     n = g.num_vertices
-    bfs_full = _make_bfs_frontier(g, mesh, axis, stats)
+    bfs_full = _make_bfs_frontier(g, mesh, axis, stats, fused=fused)
     per = bfs_full.per
     n_pad = per * num_shards
 
@@ -653,6 +794,7 @@ def make_distributed_bc(g: Graph, mesh: Mesh, axis: str = "data",
     # forward: dst-partitioned (sigma accumulates at dst) — the exact
     # partition the frontier BFS already uploaded, so reuse it
     s_sh, d_sh, v_sh = bfs_full.edge_shards
+    bfs_step = bfs_full.step_fn
     # backward: src-partitioned (delta accumulates at src); swapping the
     # COO roles localizes src and keeps dst global
     bd_pad, bs_pad, bvalid, per_b = _partition_coo(g.indices, g.edge_src, n,
@@ -729,33 +871,116 @@ def make_distributed_bc(g: Graph, mesh: Mesh, axis: str = "data",
         out_specs=P(None, axis),
     ))
 
+    # ---------------------------------------------------- fused driver
+    def fused_fn(depth, front, sigma, src_e, dst_e, val_e,
+                 bsrc_e, bdst_e, bval_e):
+        # pass 1: forward BFS — the same While as _make_bfs_frontier's
+        def bfs_cond(c):
+            _, _, level, alive = c
+            return alive & (level < n)
+
+        def bfs_body(c):
+            depth, front, level, _ = c
+            depth, front, alive = bfs_step(depth, front, level,
+                                           src_e, dst_e, val_e)
+            return depth, front, level + 1, alive
+
+        depth, _, bfs_steps, _ = jax.lax.while_loop(
+            bfs_cond, bfs_body, (depth, front, jnp.int32(0),
+                                 jnp.bool_(True)))
+        # the host reference reads max_level back between passes; fused,
+        # it is a traced replicated scalar (padded vertices sit at -1, and
+        # the source row guarantees a max >= 0)
+        max_level = jax.lax.pmax(jnp.max(depth), axis)
+
+        # pass 2: path counts, level-synchronous up to max_level
+        du_f, tree_f = fwd_prep(depth, src_e, dst_e, val_e)
+
+        def fwd_body(c):
+            sigma, level = c
+            return (fwd_step(sigma, du_f, tree_f, src_e, dst_e, level),
+                    level + 1)
+
+        sigma, _ = jax.lax.while_loop(
+            lambda c: c[1] <= max_level, fwd_body, (sigma, jnp.int32(0)))
+
+        # pass 3: dependency accumulation, levels max_level-1 .. 0
+        du_b, tree_b, sig_full = bwd_prep(depth, sigma, bsrc_e, bdst_e,
+                                          bval_e)
+
+        def bwd_body(c):
+            delta, level = c
+            return (bwd_step(delta, sig_full, du_b, tree_b, bsrc_e,
+                             bdst_e, level), level - 1)
+
+        delta, _ = jax.lax.while_loop(
+            lambda c: c[1] >= 0, bwd_body,
+            (jnp.zeros_like(sigma), max_level - 1))
+        return delta, bfs_steps, max_level
+
+    sharded_fused = jax.jit(_shard_map_norep(
+        fused_fn, mesh=mesh,
+        in_specs=(P(None, axis), P(None, axis), P(None, axis),
+                  P(axis, None), P(axis, None), P(axis, None),
+                  P(axis, None), P(axis, None), P(axis, None)),
+        out_specs=(P(None, axis), P(), P()),
+    ))
+
     def run(sources):
         srcs = np.atleast_1d(np.asarray(sources, np.int64))
         s = srcs.size
         step_bytes = (num_shards - 1) * per * 4 * s
-        depth = bfs_full(srcs)                        # (S, n_pad) sharded
-        max_level = int(np.asarray(depth[:, :n]).max())
-        du_f, tree_f = sharded_fwd_prep(depth, s_sh, d_sh, v_sh)
+        level_bytes = (num_shards - 1) * per * 1 * s  # bool frontier
         sigma0 = np.zeros((s, n_pad), np.float32)
         sigma0[np.arange(s), srcs] = 1.0
-        sigma = _put_state(sigma0, mesh, axis)
-        if stats is not None:
-            stats.record_full(step_bytes)             # fwd_prep depth gather
-        for level in range(max_level + 1):
-            sigma = sharded_fwd_step(sigma, du_f, tree_f, s_sh, d_sh,
-                                     jnp.int32(level))
+        if fused:
+            depth0 = np.full((s, n_pad), -1, np.int32)
+            depth0[np.arange(s), srcs] = 0
+            front0 = np.zeros((s, n_pad), bool)
+            front0[np.arange(s), srcs] = True
+            delta, bfs_steps, max_level = sharded_fused(
+                _put_state(depth0, mesh, axis),
+                _put_state(front0, mesh, axis),
+                _put_state(sigma0, mesh, axis),
+                s_sh, d_sh, v_sh, bs_sh, bd_sh, bv_sh)
+            max_level = int(max_level)
             if stats is not None:
+                # replay the host reference's per-step accounting from
+                # the device-side counters: BFS frontier gathers, one
+                # fwd_prep, max_level+1 σ gathers, depth+sigma bwd_prep,
+                # max_level δ gathers — all in one dispatch
+                stats.record_dispatch()
+                stats.record_run(int(bfs_steps), 0, level_bytes, 0)
                 stats.record_full(step_bytes)
-        du_b, tree_b, sig_full = sharded_bwd_prep(depth, sigma, bs_sh,
-                                                  bd_sh, bv_sh)
-        if stats is not None:
-            stats.record_full(2 * step_bytes)         # depth + sigma gathers
-        delta = _put_state(np.zeros((s, n_pad), np.float32), mesh, axis)
-        for level in range(max_level - 1, -1, -1):
-            delta = sharded_bwd_step(delta, sig_full, du_b, tree_b, bs_sh,
-                                     bd_sh, jnp.int32(level))
+                stats.record_run(max_level + 1, 0, step_bytes, 0)
+                stats.record_full(2 * step_bytes)
+                stats.record_run(max_level, 0, step_bytes, 0)
+        else:
+            depth = bfs_full(srcs)                    # (S, n_pad) sharded
+            max_level = int(np.asarray(depth[:, :n]).max())
+            du_f, tree_f = sharded_fwd_prep(depth, s_sh, d_sh, v_sh)
+            sigma = _put_state(sigma0, mesh, axis)
             if stats is not None:
-                stats.record_full(step_bytes)
+                stats.record_dispatch()
+                stats.record_full(step_bytes)         # fwd_prep depth gather
+            for level in range(max_level + 1):
+                sigma = sharded_fwd_step(sigma, du_f, tree_f, s_sh, d_sh,
+                                         jnp.int32(level))
+                if stats is not None:
+                    stats.record_dispatch()
+                    stats.record_full(step_bytes)
+            du_b, tree_b, sig_full = sharded_bwd_prep(depth, sigma, bs_sh,
+                                                      bd_sh, bv_sh)
+            if stats is not None:
+                stats.record_dispatch()
+                stats.record_full(2 * step_bytes)     # depth + sigma gathers
+            delta = _put_state(np.zeros((s, n_pad), np.float32), mesh, axis)
+            for level in range(max_level - 1, -1, -1):
+                delta = sharded_bwd_step(delta, sig_full, du_b, tree_b,
+                                         bs_sh, bd_sh, jnp.int32(level))
+                if stats is not None:
+                    stats.record_dispatch()
+                    stats.record_full(step_bytes)
         out = np.array(delta)[:, :n]
         out[np.arange(s), srcs] = 0.0
         return jnp.asarray(out)

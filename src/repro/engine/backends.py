@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import math
 from collections import OrderedDict
 from typing import Protocol, runtime_checkable
@@ -143,6 +144,28 @@ def estimate_device_bytes(num_vertices: int, num_edges: int,
 
 # ------------------------------------------------------------------- handle
 @dataclasses.dataclass
+class PackedSpMV:
+    """Pre-packed Pallas CSR-SpMV operands for one uploaded graph.
+
+    `kernels.csr_spmv.pack_edges` output for the (possibly bucketed)
+    in-CSR edge stream: dst-tiled edge blocks plus the static grid
+    dimensions. ``val`` is 0 on sentinel edges, so bucketed uploads
+    contribute nothing from padding. The grid dims are data-dependent
+    (``blocks_per_tile`` follows the densest dst tile), so they are part
+    of the compile-cache key — two graphs in the same (V, E) bucket may
+    still need distinct pallas grids.
+    """
+
+    src: jnp.ndarray
+    dst_local: jnp.ndarray
+    val: jnp.ndarray
+    blocks_per_tile: int
+    num_tiles: int
+    n_pad: int
+    interpret: bool
+
+
+@dataclasses.dataclass
 class GraphHandle:
     """What ``prepare`` returns and ``run`` consumes — one served graph.
 
@@ -161,6 +184,7 @@ class GraphHandle:
     arrays: GraphArrays | None = None
     shard_state: object | None = None
     hot_prefix_fraction: float | None = None  # sharded exchange policy
+    spmv: PackedSpMV | None = None  # Pallas PR relaxation operands
 
 
 @runtime_checkable
@@ -190,6 +214,14 @@ def _backend_counters(metrics: MetricsRegistry, backend: str) -> dict:
         "prepared": metrics.counter("engine_graphs_prepared_total",
                                     "graphs uploaded/prepared",
                                     backend=backend),
+        # host->device kernel launches. Single-device queries are one
+        # launch each; sharded queries were one launch *per traversal
+        # step* until the fused drivers (core/dist.py) collapsed them to
+        # one per run — the collapse tests/test_fused_loops.py asserts
+        # through this counter.
+        "dispatches": metrics.counter("engine_dispatches_total",
+                                      "host->device kernel launches",
+                                      backend=backend),
     }
 
 
@@ -213,6 +245,7 @@ class SingleDeviceBackend:
     def __init__(self, bucketing: bool = True, growth: float = 2.0,
                  v_floor: int = 256, e_floor: int = 1024,
                  max_cached_executables: int | None = None,
+                 pallas_pr: bool | str = "auto",
                  metrics: MetricsRegistry | None = None):
         if max_cached_executables is not None and max_cached_executables < 1:
             raise ValueError("max_cached_executables must be >= 1 or None")
@@ -221,6 +254,17 @@ class SingleDeviceBackend:
         self.v_floor = v_floor
         self.e_floor = e_floor
         self.max_cached_executables = max_cached_executables
+        # Pallas PR relaxation: "auto" compiles the real kernel on TPU
+        # and stays off elsewhere (the XLA segment-sum path is the CPU
+        # production fallback); True forces it, falling back to the
+        # pallas interpreter off-TPU so CI without TPUs still runs the
+        # same kernel code (slow — validation, not serving).
+        on_tpu = jax.default_backend() == "tpu"
+        if pallas_pr == "auto":
+            self.pallas_pr = on_tpu
+        else:
+            self.pallas_pr = bool(pallas_pr)
+        self._pallas_interpret = not on_tpu
         self._cache: OrderedDict[tuple, object] = OrderedDict()
         # counters are registry instruments (obs.py); the legacy int
         # attributes below are read-through properties over them
@@ -276,17 +320,32 @@ class SingleDeviceBackend:
                            pad_to=bucket if bucket != (n, e) else None)
         self._counters["prepared"].inc()
         self._bucket_counts[bucket] = self._bucket_counts.get(bucket, 0) + 1
+        spmv = self._pack_spmv(arrays) if self.pallas_pr else None
         return GraphHandle(self.name, n, e, bucket,
-                           estimate_device_bytes(*bucket), arrays=arrays)
+                           estimate_device_bytes(*bucket), arrays=arrays,
+                           spmv=spmv)
+
+    def _pack_spmv(self, arrays: GraphArrays) -> PackedSpMV:
+        """Pack the (bucketed) in-CSR edge stream for the Pallas kernel.
+
+        Edge values are the PR relaxation's coefficients: 1 for real
+        edges, 0 for sentinels (`to_device` keeps real edges on the
+        ``[:E]`` prefix of *both* CSR views, so ``edge_valid`` aligns
+        with the in-CSR order too).
+        """
+        from ..kernels.csr_spmv.csr_spmv import pack_edges
+        ev = arrays.edge_valid
+        weights = None if ev is None else np.asarray(ev, np.float32)
+        src, dst_local, val, bpt, ntiles, n_pad = pack_edges(
+            np.asarray(arrays.t_indptr), np.asarray(arrays.t_indices),
+            weights)
+        return PackedSpMV(jnp.asarray(src), jnp.asarray(dst_local),
+                          jnp.asarray(val), bpt, ntiles, n_pad,
+                          self._pallas_interpret)
 
     # ------------------------------------------------------------------ run
-    def _compiled(self, kernel: str, ga: GraphArrays):
-        # validate the kernel name before touching any telemetry counter
-        fn = build_kernel(kernel)
-        # mask presence changes the pytree structure, so jax recompiles
-        # even at equal shapes — the telemetry key must not conflate them
-        key = (kernel, ga.num_vertices, ga.num_edges,
-               ga.vertex_valid is not None)
+    def _cache_get(self, key: tuple, build):
+        """Hit/miss-counted LRU lookup; ``build()`` makes the jit wrapper."""
         cached = self._cache.get(key)
         if cached is not None:
             self._c_hits.inc()
@@ -294,18 +353,27 @@ class SingleDeviceBackend:
             return cached
         self._c_misses.inc()
         if self.tracer is not None:
-            self.tracer.instant("compile_cache_miss", kernel=kernel,
+            self.tracer.instant("compile_cache_miss", kernel=key[0],
                                 key=str(key))
         # a per-key jit wrapper owns this key's executables, so LRU
         # eviction below actually frees them (the module-level jitted
         # kernel would pin every shape it ever compiled)
-        cached = jax.jit(fn)
+        cached = build()
         self._cache[key] = cached
         if (self.max_cached_executables is not None
                 and len(self._cache) > self.max_cached_executables):
             self._cache.popitem(last=False)  # least recently used
             self._c_evictions.inc()
         return cached
+
+    def _compiled(self, kernel: str, ga: GraphArrays):
+        # validate the kernel name before touching any telemetry counter
+        fn = build_kernel(kernel)
+        # mask presence changes the pytree structure, so jax recompiles
+        # even at equal shapes — the telemetry key must not conflate them
+        key = (kernel, ga.num_vertices, ga.num_edges,
+               ga.vertex_valid is not None)
+        return self._cache_get(key, lambda: jax.jit(fn))
 
     def run_arrays(self, ga: GraphArrays, kernel: str,
                    sources=None) -> jnp.ndarray:
@@ -314,20 +382,46 @@ class SingleDeviceBackend:
         if kernel in GLOBAL:
             fn = self._compiled(kernel, ga)
             self._counters["queries"].inc()
+            self._counters["dispatches"].inc()
             out = fn(ga)
             with self._span("device_sync", kernel=kernel):
                 return jax.block_until_ready(out)
         padded, real = pad_sources(sources, kernel)
         fn = self._compiled(kernel, ga)
         self._counters["queries"].inc()
+        self._counters["dispatches"].inc()
         self._counters["sources"].inc(real)
         out = fn(ga, jnp.asarray(padded))
         with self._span("device_sync", kernel=kernel):
             return jax.block_until_ready(out)[:real]
 
+    def _run_pr_spmv(self, handle: GraphHandle) -> jnp.ndarray:
+        """PR with the relaxation on the Pallas CSR kernel (still one
+        ``while_loop`` jit, one dispatch — only the segment-sum inside
+        the loop body changes). The cache key carries the pallas grid
+        dims: ``blocks_per_tile`` follows the densest destination tile,
+        so graphs sharing a (V, E) bucket may still need separate
+        executables."""
+        ga, sp = handle.arrays, handle.spmv
+        key = ("pr@spmv", ga.num_vertices, ga.num_edges,
+               ga.vertex_valid is not None, sp.num_tiles,
+               sp.blocks_per_tile)
+        fn = self._cache_get(key, lambda: jax.jit(functools.partial(
+            K.pagerank_spmv, blocks_per_tile=sp.blocks_per_tile,
+            num_tiles=sp.num_tiles, n_pad=sp.n_pad,
+            interpret=sp.interpret)))
+        self._counters["queries"].inc()
+        self._counters["dispatches"].inc()
+        out = fn(ga, sp.src, sp.dst_local, sp.val)
+        with self._span("device_sync", kernel="pr"):
+            return jax.block_until_ready(out)
+
     def run(self, handle: GraphHandle, kernel: str,
             sources=None) -> jnp.ndarray:
-        out = self.run_arrays(handle.arrays, kernel, sources)
+        if kernel == "pr" and handle.spmv is not None:
+            out = self._run_pr_spmv(handle)
+        else:
+            out = self.run_arrays(handle.arrays, kernel, sources)
         # slice the bucket padding back off: results live on [:V]
         return out[..., :handle.num_vertices]
 
@@ -341,6 +435,8 @@ class SingleDeviceBackend:
             "cached_keys": sorted(str(k) for k in self._cache),
             "queries_run": self.queries_run,
             "sources_run": self.sources_run,
+            "dispatches": self._counters["dispatches"].value,
+            "pallas_pr": self.pallas_pr,
             "bucketing": {
                 "enabled": self.bucketing,
                 "graphs_prepared": self.graphs_prepared,
@@ -357,7 +453,7 @@ def _make_sharded_bfs(st):
     return dist.make_distributed_bfs(
         st.graph, st.mesh, st.axis,
         hot_prefix_fraction=st.hot_prefix_fraction,
-        cold_every=st.cold_every, stats=st.stats)
+        cold_every=st.cold_every, stats=st.stats, fused=st.fused)
 
 
 def _make_sharded_sssp(st):
@@ -365,14 +461,14 @@ def _make_sharded_sssp(st):
     return dist.make_distributed_sssp(
         st.graph, st.mesh, st.axis, canonical_ids=st.canonical_ids,
         hot_prefix_fraction=st.hot_prefix_fraction,
-        cold_every=st.cold_every, stats=st.stats)
+        cold_every=st.cold_every, stats=st.stats, fused=st.fused)
 
 
 def _make_sharded_pr(st):
     from ..core import dist
     # synchronous power iteration: always a full exchange (core/dist.py)
     run, _ = dist.make_distributed_pagerank(st.graph, st.mesh, st.axis,
-                                            stats=st.stats)
+                                            stats=st.stats, fused=st.fused)
     return run
 
 
@@ -381,14 +477,14 @@ def _make_sharded_cc(st):
     return dist.make_distributed_cc(
         st.graph, st.mesh, st.axis,
         hot_prefix_fraction=st.hot_prefix_fraction,
-        cold_every=st.cold_every, stats=st.stats)
+        cold_every=st.cold_every, stats=st.stats, fused=st.fused)
 
 
 def _make_sharded_bc(st):
     from ..core import dist
     # level-synchronous float accumulation: always a full exchange
     return dist.make_distributed_bc(st.graph, st.mesh, st.axis,
-                                    stats=st.stats)
+                                    stats=st.stats, fused=st.fused)
 
 
 # Every served kernel has a sharded runner factory — full six-kernel
@@ -415,7 +511,7 @@ class _ShardedGraphState:
     def __init__(self, graph: Graph, mesh, axis: str,
                  canonical_ids: np.ndarray | None,
                  hot_prefix_fraction: float | None, cold_every: int,
-                 stats):
+                 stats, fused: bool = True):
         self.graph = graph
         self.mesh = mesh
         self.axis = axis
@@ -423,6 +519,7 @@ class _ShardedGraphState:
         self.hot_prefix_fraction = hot_prefix_fraction
         self.cold_every = cold_every
         self.stats = stats
+        self.fused = fused
         self._runners: dict[str, object] = {}
 
     def runner(self, kernel: str):
@@ -457,7 +554,8 @@ class ShardedBackend:
 
     def __init__(self, num_shards: int | None = None, axis: str = "data",
                  mesh=None, cold_every: int = 4,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 fused: bool = True):
         if mesh is None:
             n = num_shards or jax.device_count()
             mesh = jax.make_mesh((n,), (axis,))
@@ -465,6 +563,10 @@ class ShardedBackend:
         self.axis = axis
         self.num_shards = mesh.shape[axis]
         self.cold_every = cold_every
+        # fused=True runs each traversal as one on-device XLA While
+        # (one dispatch per query); False keeps the host step loop — the
+        # differential reference for tests/test_fused_loops.py
+        self.fused = fused
         self.metrics = metrics or MetricsRegistry()
         self.tracer: Tracer | None = None   # set by the owning session
         self._counters = _backend_counters(self.metrics, self.name)
@@ -500,7 +602,8 @@ class ShardedBackend:
         n, e = graph.num_vertices, graph.num_edges
         state = _ShardedGraphState(graph, self.mesh, self.axis,
                                    canonical_ids, hot_prefix_fraction,
-                                   self.cold_every, self.exchange_stats)
+                                   self.cold_every, self.exchange_stats,
+                                   fused=self.fused)
         self._counters["prepared"].inc()
         return GraphHandle(self.name, n, e, (n, e),
                            self._per_device_bytes(graph),
@@ -572,6 +675,7 @@ class ShardedBackend:
         delta = self.exchange_stats.delta(before)
         self._c_ex_steps.inc(delta.steps)
         self._c_ex_bytes.inc(delta.bytes_exchanged)
+        self._counters["dispatches"].inc(delta.dispatches)
         self.last_run_exchange = delta.as_dict()
         return out
 
@@ -581,6 +685,8 @@ class ShardedBackend:
             "graphs_prepared": self.graphs_prepared,
             "queries_run": self.queries_run,
             "sources_run": self.sources_run,
+            "fused": self.fused,
+            "dispatches": self._counters["dispatches"].value,
             "hot_prefix": {
                 **self.exchange_stats.as_dict(),
                 "cold_every": self.cold_every,

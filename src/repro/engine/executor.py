@@ -47,15 +47,17 @@ class BatchedExecutor:
     def __init__(self, single: SingleDeviceBackend | None = None,
                  num_shards: int | None = None, bucketing: bool = True,
                  max_cached_executables: int | None = None,
-                 metrics=None):
+                 metrics=None, fused: bool = True,
+                 pallas_pr: bool | str = "auto"):
         self.single = single or SingleDeviceBackend(
             bucketing=bucketing,
             max_cached_executables=max_cached_executables,
-            metrics=metrics)
+            metrics=metrics, pallas_pr=pallas_pr)
         # one registry spans the facade and both backends — a session
         # adopts it so every engine metric shares a namespace (obs.py)
         self.metrics = self.single.metrics
         self._num_shards = num_shards
+        self._fused = fused
         self._sharded: ShardedBackend | None = None
         self._tracer = None
 
@@ -64,7 +66,8 @@ class BatchedExecutor:
         """Lazy: building a mesh is pointless until a graph needs one."""
         if self._sharded is None:
             self._sharded = ShardedBackend(num_shards=self._num_shards,
-                                           metrics=self.metrics)
+                                           metrics=self.metrics,
+                                           fused=self._fused)
             self._sharded.tracer = self._tracer
         return self._sharded
 

@@ -139,13 +139,15 @@ class EngineSession:
                  max_batch_sources: int | None = None,
                  clock: Clock | None = None,
                  tracer: Tracer | None = None,
-                 profiler_dir: str | None = None):
+                 profiler_dir: str | None = None,
+                 fused: bool = True):
         # an explicitly supplied policy carries its own budget; the
         # session-level knob only configures the default policy
         self.policy = policy or ReorderPolicy(
             device_budget_bytes=device_budget_bytes)
         self.registry = registry or GraphRegistry()
-        self.executor = executor or BatchedExecutor(num_shards=num_shards)
+        self.executor = executor or BatchedExecutor(num_shards=num_shards,
+                                                    fused=fused)
         self.cache_cfg = cache_cfg  # None = scaled_config per graph
         self.redecide_factor = redecide_factor
         self.redecide_min_queries = redecide_min_queries

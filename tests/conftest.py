@@ -19,6 +19,20 @@ if _ROOT not in sys.path:  # `pytest` without -m: repo root may be absent
 from benchmarks.common import run_forced_four_devices  # noqa: E402,F401
 
 
+def pytest_sessionstart(session):
+    """Child-side guard for `run_forced_four_devices`: if the parent
+    demanded a forced device count, fail the whole session up front when
+    jax didn't honor it (e.g. XLA_FLAGS was clobbered) rather than
+    silently running the 4-shard matrix on one device."""
+    expect = os.environ.get("REPRO_EXPECT_DEVICE_COUNT")
+    if expect:
+        import jax
+        got = jax.device_count()
+        assert got == int(expect), (
+            f"forced-device subprocess expected {expect} devices, jax "
+            f"initialized {got}; XLA_FLAGS={os.environ.get('XLA_FLAGS')!r}")
+
+
 @pytest.fixture(scope="session")
 def plc_graph() -> Graph:
     return powerlaw_community(2000, avg_degree=8.0, seed=3)
