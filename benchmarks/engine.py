@@ -38,6 +38,15 @@ Phases:
    launch per request) vs the request plane (``enqueue`` + ``drain``,
    requests coalesced into shared vmapped launches). Reports device
    launches and wall per query for both, with per-request parity.
+9. **Observability** — a 64-request mixed-kernel burst through one
+   session; p50/p99 queue-wait and serve latency from the engine's own
+   histograms, plus a structurally validated Chrome trace export.
+10. **Sustained load** — open-loop Poisson arrivals against the
+    always-on plane: Zipf-over-degree sources at ~0.5x measured
+    capacity with the result cache on vs off (hit rate, launches per
+    query, latency percentiles, bit-identity sampling), then ~3.5x
+    capacity with and without bounded-queue admission control (p99
+    queue wait bounded vs saturated, rejects counted).
 
 Emits benchmarks/results/engine.json.
 """
@@ -359,7 +368,11 @@ def _phase_scheduler(scale, requests: int = 16, sources_each: int = 2):
     rng = np.random.default_rng(17)
     bursts = [rng.integers(0, n, size=sources_each) for _ in range(requests)]
 
-    seq = EngineSession(redecide_min_queries=10**6)
+    # result_cache=False on both sides: this phase measures pure request
+    # coalescing, and the warm-up submits would otherwise pre-populate the
+    # burst's sources and corrupt the launch counts (the cache gets its
+    # own sustained phase).
+    seq = EngineSession(redecide_min_queries=10**6, result_cache=False)
     sid = seq.register(g, graph_id="seq", expected_queries=256)
     seq.submit(sid, "bfs", bursts[0])            # warm the per-request shape
     launches0 = seq.executor.queries_run
@@ -368,7 +381,7 @@ def _phase_scheduler(scale, requests: int = 16, sources_each: int = 2):
     seq_wall = time.perf_counter() - t0
     seq_launches = seq.executor.queries_run - launches0
 
-    bat = EngineSession(redecide_min_queries=10**6)
+    bat = EngineSession(redecide_min_queries=10**6, result_cache=False)
     bid = bat.register(g, graph_id="bat", expected_queries=256)
     bat.submit(bid, "bfs", np.concatenate(bursts))  # warm the coalesced shape
     launches0 = bat.executor.queries_run
@@ -483,6 +496,193 @@ def _phase_observability(scale, requests: int = 64):
     return out
 
 
+def _phase_sustained(scale, paced_requests: int = 160,
+                     overload_requests: int = 200):
+    """Sustained open-loop load against the always-on request plane.
+
+    Three sub-experiments on one hub-heavy graph:
+
+    * **capacity** — closed-loop unique-source burst through the plane
+      (enqueue + drain) to measure the service capacity the open-loop
+      runs are paced against.
+    * **paced** (~0.5x capacity, Poisson arrivals, Zipf sources ranked
+      by vertex degree) — the same arrival sequence served with the
+      result cache on vs off; reports cache hit rate, device launches
+      per query, and p50/p99 queue-wait and serve latency. A sample of
+      cache-served rows is checked bit-identical against a fresh
+      reference session.
+    * **overload** (~3.5x capacity, deadline-carrying requests) — with
+      no admission control the queue grows with the run and p99 wait
+      saturates; with a bounded queue (reject on overflow) the plane
+      sheds load and p99 stays bounded. Both sides run uncached so the
+      comparison isolates admission.
+    """
+    import time
+
+    from repro.core.generators import powerlaw_community
+    from repro.engine import AdmissionPolicy, AdmissionRejected, EngineSession
+    from repro.engine.obs import merge_histogram_snapshots
+
+    n = max(2000, int(20_000 * scale))
+    g = powerlaw_community(n, avg_degree=10.0, seed=61, name="sustained")
+    rng = np.random.default_rng(29)
+    # Zipf(1.5) ranks mapped onto degree-descending vertex order: the
+    # popular sources are the hubs, which is both what real query logs
+    # look like and what the GRASP-style hot-prefix pinning targets.
+    by_degree = np.argsort(-np.asarray(g.out_degree, dtype=np.int64))
+    zipf_pool = by_degree[(rng.zipf(1.5, size=4 * paced_requests) - 1) % n]
+
+    def _fresh(**kw):
+        kw.setdefault("redecide_min_queries", 10**6)
+        kw.setdefault("max_delay", 0.005)
+        s = EngineSession(**kw)
+        s.register(g, graph_id="sus", expected_queries=4096)
+        return s
+
+    def _warm(session):
+        # compile every power-of-two source bucket the runs can hit,
+        # then wipe the warm-up rows so they can't inflate hit rates
+        for k in (1, 2, 4, 8, 16):
+            session.submit("sus", "bfs", np.arange(k))
+        if session.result_cache is not None:
+            session.result_cache.clear()
+
+    def _paced(session, sources, offered_qps, deadline=None):
+        """Open-loop arrivals; returns per-accepted-request (future,
+        lateness) where lateness is how far behind the open-loop schedule
+        the enqueue actually ran — a single-threaded generator slips when
+        the plane serves inline, and ignoring that slip (coordinated
+        omission) would hide saturation entirely."""
+        arrivals = np.cumsum(rng.exponential(1.0 / offered_qps,
+                                             size=len(sources)))
+        futs, lates, rejected = [], [], 0
+        t0 = time.perf_counter()
+        for src, at in zip(sources, arrivals):
+            lag = t0 + at - time.perf_counter()
+            if lag > 0:
+                time.sleep(lag)
+            try:
+                fut = session.enqueue("sus", "bfs", [int(src)],
+                                      deadline_seconds=deadline)
+            except AdmissionRejected:
+                rejected += 1
+                continue
+            futs.append(fut)
+            lates.append(max(0.0, time.perf_counter() - (t0 + at)))
+        session.drain()
+        return futs, lates, rejected, time.perf_counter() - t0
+
+    def _corrected(futs, lates):
+        """Schedule-corrected end-to-end latency: generator lateness plus
+        the in-plane enqueue->served time the engine accounted."""
+        e2e = [late + f.telemetry["queue_seconds"]
+               for f, late in zip(futs, lates) if f.telemetry]
+        return {
+            "e2e_p50_ms": round(float(np.percentile(e2e, 50)) * 1e3, 1),
+            "e2e_p99_ms": round(float(np.percentile(e2e, 99)) * 1e3, 1),
+        } if e2e else {"e2e_p50_ms": None, "e2e_p99_ms": None}
+
+    def _latency(session):
+        snap = session.metrics().snapshot()["histograms"]
+        row = {}
+        for label, name in (("queue_wait", "engine_queue_wait_seconds"),
+                            ("serve", "engine_serve_seconds")):
+            s = merge_histogram_snapshots(list(snap.get(name, {}).values()))
+            row[f"{label}_p50_ms"] = round((s.get("p50") or 0.0) * 1e3, 3)
+            row[f"{label}_p99_ms"] = round((s.get("p99") or 0.0) * 1e3, 3)
+        return row
+
+    # --- capacity: closed-loop unique-source burst through the plane
+    cap_s = _fresh(result_cache=False)
+    _warm(cap_s)
+    uniq = rng.choice(n, size=48, replace=False)
+    t0 = time.perf_counter()
+    for src in uniq:
+        cap_s.enqueue("sus", "bfs", [int(src)])
+    cap_s.drain()
+    capacity_qps = len(uniq) / max(time.perf_counter() - t0, 1e-9)
+    cap_s.close(drain=False)
+
+    # --- paced: cached vs uncached on the identical Zipf arrival stream
+    offered = 0.5 * capacity_qps
+    sources = zipf_pool[:paced_requests]
+    paced = {"offered_qps": round(offered, 1), "requests": paced_requests}
+    cached_futs = None
+    for label, kw in (("cached", {}), ("uncached", {"result_cache": False})):
+        s = _fresh(**kw)
+        _warm(s)
+        hits0 = s.result_cache.hits if s.result_cache else 0
+        miss0 = s.result_cache.misses if s.result_cache else 0
+        launches0 = s.executor.queries_run
+        futs, lates, _, wall = _paced(s, sources, offered)
+        launches = s.executor.queries_run - launches0
+        row = {
+            "launches": launches,
+            "launches_per_query": round(launches / paced_requests, 4),
+            "wall_seconds": round(wall, 3),
+            **_corrected(futs, lates),
+            **_latency(s),
+        }
+        if s.result_cache is not None:
+            hits = s.result_cache.hits - hits0
+            misses = s.result_cache.misses - miss0
+            row["cache_hit_rate"] = round(hits / max(hits + misses, 1), 4)
+            row["cache"] = s.result_cache.stats()
+            cached_futs = futs
+        paced[label] = row
+        s.close(drain=False)
+    # cache-served rows must be bit-identical to fresh execution
+    ref = _fresh(result_cache=False)
+    picks = rng.choice(paced_requests, size=min(12, paced_requests),
+                       replace=False)
+    paced["bit_identical"] = all(
+        np.array_equal(np.asarray(cached_futs[i].result()),
+                       np.asarray(ref.submit("sus", "bfs",
+                                             [int(sources[i])])))
+        for i in picks)
+    ref.close(drain=False)
+
+    # --- overload: no admission vs a bounded queue, deadlines attached
+    over_offered = 3.5 * capacity_qps
+    over_sources = rng.integers(0, n, size=overload_requests)
+    overload = {"offered_qps": round(over_offered, 1),
+                "requests": overload_requests}
+    policies = (("no_admission", None),
+                ("admission", AdmissionPolicy(max_pending=32,
+                                              overload="reject")))
+    for label, pol in policies:
+        s = _fresh(result_cache=False, max_delay=10.0, admission=pol)
+        _warm(s)
+        futs, lates, rejected, wall = _paced(s, over_sources, over_offered,
+                                             deadline=0.08)
+        tel = s.scheduler.telemetry()
+        overload[label] = {
+            "served": tel["requests_served"],
+            "rejected": rejected,
+            "deadlines_missed": tel["deadlines_missed"],
+            "wall_seconds": round(wall, 3),
+            **_corrected(futs, lates),
+            **_latency(s),
+        }
+        s.close(drain=False)
+    overload["p99_bounded"] = (overload["admission"]["e2e_p99_ms"]
+                               < overload["no_admission"]["e2e_p99_ms"])
+
+    out = {"capacity_qps": round(capacity_qps, 1), "paced": paced,
+           "overload": overload}
+    print(f"[engine] sustained: capacity {capacity_qps:.0f} qps; paced "
+          f"@{offered:.0f} qps hit-rate "
+          f"{paced['cached']['cache_hit_rate']:.2f}, launches/query "
+          f"{paced['cached']['launches_per_query']:.3f} cached vs "
+          f"{paced['uncached']['launches_per_query']:.3f} uncached, "
+          f"bit-identical={paced['bit_identical']}; overload "
+          f"@{over_offered:.0f} qps e2e p99 "
+          f"{overload['no_admission']['e2e_p99_ms']:.0f}ms open vs "
+          f"{overload['admission']['e2e_p99_ms']:.0f}ms bounded "
+          f"({overload['admission']['rejected']} rejected)", flush=True)
+    return out
+
+
 def _phase_fused(scale):
     """4 forced host devices: the fused on-device traversal loop vs the
     host step loop, per kernel — dispatches per query (O(steps) -> O(1)),
@@ -561,7 +761,7 @@ def _phase_fused(scale):
 
 
 PHASES = ("decisions", "redecision", "calibration", "bucketing", "sharded",
-          "hot_prefix", "fused", "scheduler", "observability")
+          "hot_prefix", "fused", "scheduler", "observability", "sustained")
 
 
 def parse_phases(value: str | None) -> list[str]:
@@ -613,6 +813,8 @@ def run(scale: float = 0.5, batch: int = 8, repeats: int = 5,
         out["scheduler"] = _phase_scheduler(scale)
     if "observability" in todo:
         out["observability"] = _phase_observability(scale)
+    if "sustained" in todo:
+        out["sustained"] = _phase_sustained(scale)
 
     out["calibration"] = session.policy.calibrator.as_dict()
     out["executor"] = session.executor.telemetry()

@@ -16,7 +16,10 @@ registered with a misleading volume hint is re-decided — and re-reordered
 in place — once its realized traffic diverges. Finally it drives the
 **request plane** (docs/scheduler.md): concurrent queries enqueued as
 futures coalesce into shared device launches at a flush boundary —
-identical answers, a fraction of the launches.
+identical answers, a fraction of the launches — and repeat traffic is
+served straight from the result cache with zero launches (the plane is
+always-on: auto-flush ticks and ``result()`` are flush boundaries, no
+explicit ``flush()`` needed).
 
 Run:  PYTHONPATH=src python examples/engine_demo.py
 """
@@ -145,6 +148,26 @@ def main():
           f"{sched['launches']} launches, "
           f"{sched['dedup_hits']} dedup hit(s)")
     assert launches == 2 and sched["dedup_hits"] >= 2
+
+    print("== 6. always-on: repeat traffic hits the result cache")
+    launches_before = session.executor.queries_run
+    # the same burst again — every row is already cached under the
+    # current (graph, generation, kernel, source) key, and result() on a
+    # pending future is itself a flush boundary: no flush() call, no
+    # device launch
+    repeats = [session.enqueue(gid, "bfs", f.request.sources)
+               for f in futs[:6]] + [session.enqueue(gid, "pr")]
+    for f, want in zip(repeats[:6], futs[:6]):
+        assert np.array_equal(np.asarray(f.result()),
+                              np.asarray(want.result()))
+    assert all(f.telemetry["served_from_cache"] for f in repeats[:6])
+    launches = session.executor.queries_run - launches_before
+    cache = session.result_cache.stats()
+    print(f"   {len(repeats)} repeat requests -> {launches} device "
+          f"launches; cache: {cache['entries']} rows "
+          f"({cache['pinned']} hot-prefix pinned), "
+          f"hit rate {cache['hit_rate']:.2f}")
+    assert launches == 0
 
 
 if __name__ == "__main__":

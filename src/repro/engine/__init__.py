@@ -22,22 +22,27 @@ from .backends import (SHARDED_KERNELS, ExecutionBackend, GraphHandle,
 from .calibration import DEFAULT_PRIORS, SchemeStats, StrengthCalibrator
 from .executor import BatchedExecutor
 from .obs import (Clock, Counter, Gauge, Histogram, ManualClock,
-                  MetricsRegistry, ProfilerHook, Tracer,
+                  MetricsRegistry, ProfilerHook, RateWindow, Tracer,
                   validate_chrome_trace)
-from .policy import PolicyDecision, PolicyRecord, ReorderPolicy
+from .policy import (AdmissionPolicy, PolicyDecision, PolicyRecord,
+                     ReorderPolicy)
 from .registry import GraphProbes, GraphRegistry, probe_graph
-from .scheduler import (MicroBatchScheduler, QueryFuture, Request,
+from .result_cache import ResultCache
+from .scheduler import (AdmissionRejected, DeadlineExceeded,
+                        MicroBatchScheduler, QueryFuture, Request,
                         canonical_component_labels)
 from .session import AmortizationLedger, EngineSession
 
 __all__ = [
-    "AmortizationLedger", "BatchedExecutor", "Clock", "Counter",
-    "DEFAULT_PRIORS", "EngineSession", "ExecutionBackend", "Gauge",
+    "AdmissionPolicy", "AdmissionRejected", "AmortizationLedger",
+    "BatchedExecutor", "Clock", "Counter", "DEFAULT_PRIORS",
+    "DeadlineExceeded", "EngineSession", "ExecutionBackend", "Gauge",
     "GraphHandle", "GraphProbes", "GraphRegistry", "Histogram",
     "ManualClock", "MetricsRegistry", "MicroBatchScheduler",
     "PolicyDecision", "PolicyRecord", "ProfilerHook", "QueryFuture",
-    "ReorderPolicy", "Request", "SHARDED_KERNELS", "SchemeStats",
-    "ShardedBackend", "SingleDeviceBackend", "StrengthCalibrator",
-    "Tracer", "bucket_dims", "canonical_component_labels",
-    "estimate_device_bytes", "probe_graph", "validate_chrome_trace",
+    "RateWindow", "ReorderPolicy", "Request", "ResultCache",
+    "SHARDED_KERNELS", "SchemeStats", "ShardedBackend",
+    "SingleDeviceBackend", "StrengthCalibrator", "Tracer", "bucket_dims",
+    "canonical_component_labels", "estimate_device_bytes", "probe_graph",
+    "validate_chrome_trace",
 ]

@@ -40,6 +40,7 @@ docs/observability.md has the metric catalog and the span taxonomy.
 from __future__ import annotations
 
 import bisect
+import collections
 import contextlib
 import json
 import math
@@ -93,6 +94,35 @@ def signed_log_boundaries(lo: float = 1e-6, hi: float = 128.0,
     """Mirrored log boundaries for signed quantities (deadline slack)."""
     pos = log_boundaries(lo, hi, factor)
     return tuple([-b for b in reversed(pos)] + [0.0] + list(pos))
+
+
+# --------------------------------------------------------------- rate window
+class RateWindow:
+    """Sliding-window event fraction over the last ``size`` observations.
+
+    The scheduler records one boolean per deadline-carrying request at
+    serve/expiry time (missed or met); ``rate`` is the recent miss
+    fraction feeding the admission shed policy — a bounded deque, so an
+    old overload stops biasing the signal once healthy serves displace
+    it.
+    """
+
+    def __init__(self, size: int = 64):
+        if size < 1:
+            raise ValueError("window size must be >= 1")
+        self._events: collections.deque[bool] = collections.deque(maxlen=size)
+
+    def record(self, event: bool) -> None:
+        self._events.append(bool(event))
+
+    @property
+    def rate(self) -> float:
+        if not self._events:
+            return 0.0
+        return sum(self._events) / len(self._events)
+
+    def __len__(self) -> int:
+        return len(self._events)
 
 
 # -------------------------------------------------------------- instruments
@@ -537,7 +567,8 @@ class ProfilerHook:
 
 __all__ = [
     "Clock", "Counter", "ENGINE_TID", "Gauge", "Histogram", "ManualClock",
-    "MetricsRegistry", "ProfilerHook", "REQUEST_TID_BASE", "Tracer",
+    "MetricsRegistry", "ProfilerHook", "REQUEST_TID_BASE", "RateWindow",
+    "Tracer",
     "log_boundaries", "merge_histogram_snapshots", "signed_log_boundaries",
     "validate_chrome_trace",
 ]

@@ -52,6 +52,56 @@ class PolicyDecision:
     hot_prefix_fraction: float | None = None
 
 
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Backpressure contract for the request plane (scheduler.py).
+
+    ``max_pending`` bounds the queue: at the cap an arrival is either
+    rejected with `scheduler.AdmissionRejected` (``overload="reject"``)
+    or *degraded* — admitted as best-effort with its priority clamped to
+    ``degraded_priority`` and its deadline dropped (``"degrade"``).
+    Below the cap a *shed* band starts at ``soft_fraction`` of it: when
+    the queue is that deep AND the recent deadline-miss rate (a
+    `RateWindow` over the last ``miss_window`` deadline outcomes, armed
+    after ``min_miss_samples``) is at least ``shed_miss_rate``, new
+    best-effort arrivals (no deadline, priority <= 0) are shed so the
+    latency-sensitive traffic that is already missing deadlines stops
+    queueing behind them.
+    """
+
+    max_pending: int = 1024
+    overload: str = "reject"      # "reject" | "degrade"
+    soft_fraction: float = 0.5
+    shed_miss_rate: float = 0.5
+    miss_window: int = 64
+    min_miss_samples: int = 8
+    degraded_priority: int = -1
+
+    def __post_init__(self):
+        if self.max_pending < 1:
+            raise ValueError("max_pending must be >= 1")
+        if self.overload not in ("reject", "degrade"):
+            raise ValueError("overload must be 'reject' or 'degrade'")
+        if not 0.0 <= self.soft_fraction <= 1.0:
+            raise ValueError("soft_fraction must be in [0, 1]")
+        if not 0.0 <= self.shed_miss_rate <= 1.0:
+            raise ValueError("shed_miss_rate must be in [0, 1]")
+        if self.miss_window < 1:
+            raise ValueError("miss_window must be >= 1")
+
+    @property
+    def soft_limit(self) -> int:
+        return max(int(self.max_pending * self.soft_fraction), 1)
+
+    def as_dict(self) -> dict:
+        return {
+            "max_pending": self.max_pending,
+            "overload": self.overload,
+            "soft_limit": self.soft_limit,
+            "shed_miss_rate": self.shed_miss_rate,
+        }
+
+
 @dataclasses.dataclass
 class PolicyRecord:
     """Predicted vs realized benefit for one policy decision."""

@@ -85,6 +85,10 @@ class GraphEntry:
     backend: str = "single"           # placement the policy chose
     bucket_shape: tuple | None = None  # padded (V_b, E_b) upload shape
     hot_prefix_fraction: float | None = None  # sharded exchange thinning
+    # served-id prefix length considered "hot" under the current layout
+    # (0 for identity/random layouts): result-cache entries whose source
+    # permutes below this index are pinned (GRASP-style, result_cache.py)
+    hot_prefix_len: int = 0
     reorder_seconds: float = 0.0
     decision: object | None = None    # engine.policy.PolicyDecision
     ledger: object | None = None      # engine.session.AmortizationLedger

@@ -4,7 +4,7 @@ The paper's economic argument is *amortization* — a reorder pays off only
 across many traversals — yet a blocking one-caller ``submit`` launches one
 device program per call, so concurrent traffic can never share a vmapped
 launch and the policy never observes real batch shapes. This module turns
-the front door into a request plane:
+the front door into an **always-on** request plane:
 
 * ``EngineSession.enqueue(...)`` returns a `QueryFuture` immediately;
   nothing touches a device until a **flush boundary**.
@@ -20,7 +20,35 @@ the front door into a request plane:
     source-independent, so running it twice is pure waste;
   - drains queues in **priority / deadline order** (higher ``priority``
     first, then earlier absolute deadline, then FIFO), so a latency-bound
-    request is never stuck behind a bulk scan that arrived first.
+    request is never stuck behind a bulk scan that arrived first;
+  - **round-robins across graphs** when several graphs are pending in one
+    flush: launches alternate one chunk per ``(graph_id, kernel)`` stream
+    per cycle (graphs rotated between flushes), so one graph's burst
+    chunked by ``max_batch_sources`` cannot monopolize consecutive
+    launches.
+
+* **auto-flush** — production traffic never calls ``flush()``. A flush
+  tick (`poll`) fires whenever any pending request is past its deadline
+  or older than ``max_delay``; it piggy-backs on every ``enqueue`` and
+  ``QueryFuture.done()`` through the session's injectable clock, and an
+  optional background thread (`start_auto_flush`) covers fully idle
+  callers. No request waits past ``max_delay``/its deadline without a
+  launch, flush() or not.
+
+* **admission control** — an `engine.policy.AdmissionPolicy` bounds the
+  queue: at ``max_pending`` an arrival is rejected with a typed
+  `AdmissionRejected` or degraded to best-effort; below the cap,
+  best-effort arrivals are shed while the recent deadline-miss rate
+  (`obs.RateWindow`) says the plane is already overloaded. A pending
+  request read past its deadline raises a typed `DeadlineExceeded` from
+  ``result()`` instead of blocking on a flush that may never come.
+
+* **result cache** — identical rows are served from memory inside a
+  flush window *and* across windows: per-source rows are cached under
+  ``(graph_id, generation, kernel, source)`` with hot-prefix sources
+  pinned (`engine.result_cache`, GRASP-style), so repeat-heavy traffic
+  stops re-launching what it asked seconds ago. Generation bumps from
+  re-decision make stale rows unreachable by key.
 
 * **generations** — every (re-)applied policy decision bumps the graph
   entry's ``generation``; a request's sources are translated through the
@@ -32,8 +60,9 @@ the front door into a request plane:
 
 * **telemetry** — every future carries per-request serving facts: the
   launch it rode, how many requests shared it, its wall share, the
-  generation that served it, whether its deadline was met, and (sharded
-  placements) the per-run `ExchangeStats` delta from ``core/dist.py``.
+  generation that served it, whether its deadline was met, how many of
+  its rows came from the result cache, and (sharded placements) the
+  per-run `ExchangeStats` delta from ``core/dist.py``.
 
 * **observability** (obs.py, docs/observability.md) — every counter here
   is a view over the session's `MetricsRegistry` (the old ``telemetry()``
@@ -41,8 +70,8 @@ the front door into a request plane:
   deadline-slack histograms are recorded per ``(graph_id, kernel)``, and
   each request carries a ``trace_id`` tying its per-request trace track
   (enqueue → queue_wait → serve) to the engine track's flush / coalesce /
-  translate / launch spans. All timing flows through the session's
-  injectable clock, so latency tests are deterministic.
+  translate / launch / cache_hit spans. All timing flows through the
+  session's injectable clock, so latency tests are deterministic.
 
 ``EngineSession.submit`` is reimplemented as enqueue + flush sugar, so
 the blocking API is exactly one request riding a one-element batch —
@@ -53,12 +82,14 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from typing import TYPE_CHECKING
 
 import numpy as np
 
 from .backends import GLOBAL, MULTI_SOURCE, build_kernel, source_bucket
-from .obs import REQUEST_TID_BASE, signed_log_boundaries
+from .obs import REQUEST_TID_BASE, RateWindow, signed_log_boundaries
+from .result_cache import GLOBAL_SOURCE
 
 if TYPE_CHECKING:  # import cycle: session builds the scheduler
     from .session import EngineSession
@@ -66,6 +97,32 @@ if TYPE_CHECKING:  # import cycle: session builds the scheduler
 # component-label kernels whose *values* (not just positions) are vertex
 # ids and must be canonicalized back to original id space at the boundary
 LABEL_KERNELS = ("cc", "ccsv")
+
+
+class AdmissionRejected(RuntimeError):
+    """The request plane refused an arrival (bounded queue / shed band).
+
+    ``shed`` distinguishes the soft path (best-effort arrival shed while
+    deadlines are being missed) from the hard queue cap.
+    """
+
+    def __init__(self, message: str, pending: int, limit: int,
+                 shed: bool = False):
+        super().__init__(message)
+        self.pending = pending
+        self.limit = limit
+        self.shed = shed
+
+
+class DeadlineExceeded(TimeoutError):
+    """``result()`` was called on a request already past its deadline
+    while still pending — the caller gets a typed error *now* instead of
+    paying for a launch whose answer it already declared worthless."""
+
+    def __init__(self, message: str, deadline: float, now: float):
+        super().__init__(message)
+        self.deadline = deadline
+        self.now = now
 
 
 def canonical_component_labels(labels: np.ndarray) -> np.ndarray:
@@ -103,6 +160,7 @@ class Request:
     future: "QueryFuture"
     generation: int | None = None  # layout generation that served it
     trace_id: str | None = None    # ties this request's spans together
+    degraded: bool = False         # admitted best-effort under overload
 
     @property
     def num_sources(self) -> int:
@@ -121,7 +179,11 @@ class QueryFuture:
     ``result()`` is the blocking read: if the request has not been served
     yet it flushes the owning scheduler for this request's graph first,
     so a lone ``enqueue(...).result()`` behaves exactly like the old
-    blocking ``submit``. ``telemetry`` is populated at serve time (see
+    blocking ``submit`` — unless the deadline already passed, in which
+    case it raises `DeadlineExceeded` instead of launching work whose
+    answer is already stale. ``done()`` doubles as the auto-flush tick:
+    polling a future gives the scheduler a chance to serve anything
+    overdue. ``telemetry`` is populated at serve time (see
     `MicroBatchScheduler._account`).
     """
 
@@ -135,11 +197,18 @@ class QueryFuture:
 
     # ------------------------------------------------------------ protocol
     def done(self) -> bool:
+        if not self._done:
+            self._scheduler.poll()      # piggy-backed auto-flush tick
         return self._done
 
     def result(self) -> np.ndarray:
         if not self._done:
-            self._scheduler.flush(self.request.graph_id)
+            req = self.request
+            if (req.deadline is not None
+                    and self._scheduler.session.clock.now() > req.deadline):
+                self._scheduler._expire(req)
+            if not self._done:
+                self._scheduler.flush(req.graph_id)
         if not self._done:  # defensive: flush must have served us
             raise RuntimeError(
                 f"flush did not serve request {self.request.seq} "
@@ -172,21 +241,38 @@ class MicroBatchScheduler:
 
     One scheduler fronts one `EngineSession`; the session owns the
     registry/policy/executor and exposes the launch internals the
-    scheduler drives (`EngineSession._launch` / ``_finalize`` /
-    ``_maybe_redecide``). ``max_batch_sources`` caps how many concatenated
-    sources one coalesced launch may carry (None = coalesce everything
-    pending into a single launch; the executor still pads the batch to
-    its power-of-two `source_bucket`).
+    scheduler drives (`EngineSession._launch` / ``_maybe_redecide``).
+    ``max_batch_sources`` caps how many concatenated sources one coalesced
+    launch may carry (None = coalesce everything pending into a single
+    launch; the executor still pads the batch to its power-of-two
+    `source_bucket`). ``max_delay`` is the auto-flush age bound (None
+    disables the tick); ``admission`` an `engine.policy.AdmissionPolicy`
+    (None admits everything). A single re-entrant lock serializes
+    enqueue/flush/poll so the optional background flusher and the caller
+    thread compose.
     """
 
     def __init__(self, session: "EngineSession",
-                 max_batch_sources: int | None = None):
+                 max_batch_sources: int | None = None,
+                 max_delay: float | None = 0.25,
+                 admission=None):
         if max_batch_sources is not None and max_batch_sources < 1:
             raise ValueError("max_batch_sources must be >= 1 or None")
+        if max_delay is not None and max_delay < 0:
+            raise ValueError("max_delay must be >= 0 or None")
         self.session = session
         self.max_batch_sources = max_batch_sources
+        self.max_delay = max_delay
+        self.admission = admission
         self._queues: dict[tuple[str, str], list[Request]] = {}
         self._seq = itertools.count()
+        self._lock = threading.RLock()
+        self._rr_cursor = 0          # rotates which graph leads a flush
+        self._miss_window = RateWindow(
+            admission.miss_window if admission is not None else 64)
+        self._flusher: threading.Thread | None = None
+        self._flusher_stop: threading.Event | None = None
+        self.auto_flush_error: BaseException | None = None
         # counters live in the session's metrics registry; the public
         # attributes below (and telemetry()) are read-through views, so
         # the pre-obs shapes survive while the registry is the one truth
@@ -208,6 +294,21 @@ class MicroBatchScheduler:
         self._c_flushes = m.counter("engine_flushes_total", "flush boundaries")
         self._c_deadlines = m.counter(
             "engine_deadlines_missed_total", "requests served past deadline")
+        self._c_auto = m.counter(
+            "engine_auto_flushes_total",
+            "flush boundaries triggered by the max-delay/deadline tick")
+        self._c_expired = m.counter(
+            "engine_requests_expired_total",
+            "pending requests failed with DeadlineExceeded at result()")
+        self._c_adm_rejected = m.counter(
+            "engine_admission_rejected_total",
+            "arrivals rejected at the pending-queue cap")
+        self._c_adm_degraded = m.counter(
+            "engine_admission_degraded_total",
+            "arrivals demoted to best-effort at the pending-queue cap")
+        self._c_adm_shed = m.counter(
+            "engine_admission_shed_total",
+            "best-effort arrivals shed while deadlines were being missed")
         self._g_pending = m.gauge(
             "engine_pending_requests", "requests enqueued but not served")
         self._metrics = m
@@ -249,13 +350,35 @@ class MicroBatchScheduler:
     def deadlines_missed(self) -> int:
         return self._c_deadlines.value
 
+    @property
+    def auto_flushes(self) -> int:
+        return self._c_auto.value
+
+    @property
+    def requests_expired(self) -> int:
+        return self._c_expired.value
+
+    @property
+    def admission_rejected(self) -> int:
+        return self._c_adm_rejected.value
+
+    @property
+    def admission_degraded(self) -> int:
+        return self._c_adm_degraded.value
+
+    @property
+    def admission_shed(self) -> int:
+        return self._c_adm_shed.value
+
     # ------------------------------------------------------------- enqueue
     def enqueue(self, graph_id: str, kernel: str, sources=None,
                 priority: int = 0,
                 deadline_seconds: float | None = None) -> QueryFuture:
         """Queue one request; returns its future. Validation is eager —
         unknown kernel/graph and empty source batches raise *here*, not at
-        flush time where they would poison a coalesced batch."""
+        flush time where they would poison a coalesced batch. Admission
+        control also runs here: an overloaded plane rejects/degrades/sheds
+        before the request ever holds queue memory."""
         build_kernel(kernel)                    # ValueError on unknown
         entry = self.session.registry.get(graph_id)  # KeyError on unknown
         srcs = None
@@ -270,56 +393,181 @@ class MicroBatchScheduler:
                 raise ValueError(
                     f"{kernel} sources must be in [0, {n}); got "
                     f"[{int(srcs.min())}, {int(srcs.max())}]")
-        now = self.session.clock.now()
-        seq = next(self._seq)
-        req = Request(
-            seq=seq, graph_id=graph_id, kernel=kernel,
-            sources=srcs, priority=priority,
-            deadline=(now + deadline_seconds
-                      if deadline_seconds is not None else None),
-            enqueued_at=now, future=None,  # type: ignore[arg-type]
-            trace_id=f"req-{seq}")
-        req.future = QueryFuture(self, req)
-        self._queues.setdefault((graph_id, kernel), []).append(req)
-        self._c_enqueued.inc()
-        self._g_pending.inc()
-        tracer = self.session.tracer
-        tracer.set_thread_name(REQUEST_TID_BASE + seq, req.trace_id)
-        tracer.instant("enqueue", tid=REQUEST_TID_BASE + seq,
-                       trace_id=req.trace_id, graph_id=graph_id,
-                       kernel=kernel, priority=priority)
+        with self._lock:
+            priority, deadline_seconds, degraded = self._admit(
+                graph_id, kernel, priority, deadline_seconds)
+            now = self.session.clock.now()
+            seq = next(self._seq)
+            req = Request(
+                seq=seq, graph_id=graph_id, kernel=kernel,
+                sources=srcs, priority=priority,
+                deadline=(now + deadline_seconds
+                          if deadline_seconds is not None else None),
+                enqueued_at=now, future=None,  # type: ignore[arg-type]
+                trace_id=f"req-{seq}", degraded=degraded)
+            req.future = QueryFuture(self, req)
+            self._queues.setdefault((graph_id, kernel), []).append(req)
+            self._c_enqueued.inc()
+            self._g_pending.inc()
+            tracer = self.session.tracer
+            tracer.set_thread_name(REQUEST_TID_BASE + seq, req.trace_id)
+            tracer.instant("enqueue", tid=REQUEST_TID_BASE + seq,
+                           trace_id=req.trace_id, graph_id=graph_id,
+                           kernel=kernel, priority=priority)
+            self.poll()                  # piggy-backed auto-flush tick
         return req.future
+
+    def _admit(self, graph_id: str, kernel: str, priority: int,
+               deadline_seconds: float | None) -> tuple[int, float | None,
+                                                        bool]:
+        """Apply the admission policy to one arrival; returns the possibly
+        degraded ``(priority, deadline_seconds, degraded)`` or raises
+        `AdmissionRejected`."""
+        adm = self.admission
+        if adm is None:
+            return priority, deadline_seconds, False
+        pending = self.pending()
+        if pending >= min(adm.max_pending, adm.soft_limit):
+            # the plane looks overloaded — tick it before judging the
+            # arrival, so admission sees the post-flush depth and a queue
+            # full of *overdue* work can't wedge into a reject storm where
+            # nothing ever drains (every rejected enqueue bails before the
+            # piggy-backed poll that would have flushed it)
+            self.poll()
+            pending = self.pending()
+        if pending >= adm.max_pending:
+            if adm.overload == "degrade":
+                self._c_adm_degraded.inc()
+                return min(priority, adm.degraded_priority), None, True
+            self._c_adm_rejected.inc()
+            raise AdmissionRejected(
+                f"queue full: {pending} pending >= max_pending="
+                f"{adm.max_pending} ({graph_id}/{kernel})",
+                pending=pending, limit=adm.max_pending)
+        best_effort = deadline_seconds is None and priority <= 0
+        if (best_effort and pending >= adm.soft_limit
+                and len(self._miss_window) >= adm.min_miss_samples
+                and self._miss_window.rate >= adm.shed_miss_rate):
+            self._c_adm_shed.inc()
+            raise AdmissionRejected(
+                f"shedding best-effort arrival: {pending} pending >= "
+                f"soft_limit={adm.soft_limit} with recent deadline-miss "
+                f"rate {self._miss_window.rate:.2f} ({graph_id}/{kernel})",
+                pending=pending, limit=adm.soft_limit, shed=True)
+        return priority, deadline_seconds, False
 
     def pending(self, graph_id: str | None = None) -> int:
         return sum(len(reqs) for (gid, _), reqs in self._queues.items()
                    if graph_id is None or gid == graph_id)
 
+    # ---------------------------------------------------------- auto-flush
+    def poll(self) -> int:
+        """The auto-flush tick: flush every graph holding an *overdue*
+        request — older than ``max_delay`` or past its deadline. Cheap
+        when nothing is overdue (one pass over the pending queues);
+        piggy-backed on ``enqueue``/``done()`` and driven by the optional
+        background thread, so the plane serves traffic even when no one
+        ever calls ``flush()``."""
+        with self._lock:
+            now = self.session.clock.now()
+            due: list[str] = []
+            for (gid, _), reqs in self._queues.items():
+                if gid in due:
+                    continue
+                for r in reqs:
+                    if ((r.deadline is not None and now >= r.deadline)
+                            or (self.max_delay is not None
+                                and now - r.enqueued_at >= self.max_delay)):
+                        due.append(gid)
+                        break
+            if not due:
+                return 0
+            self._c_auto.inc()
+            return self._flush_graphs(due)
+
+    def start_auto_flush(self, interval: float | None = None
+                         ) -> threading.Thread:
+        """Run ``poll()`` from a daemon thread every ``interval`` seconds
+        (default ``max_delay / 2``) so fully idle callers still get their
+        overdue requests served. Idempotent; `stop_auto_flush` (or
+        ``EngineSession.close``) tears it down."""
+        with self._lock:
+            if self._flusher is not None:
+                return self._flusher
+            if interval is None:
+                interval = (self.max_delay / 2 if self.max_delay else 0.05)
+            interval = max(float(interval), 1e-3)
+            stop = threading.Event()
+
+            def _loop():
+                while not stop.wait(interval):
+                    try:
+                        self.poll()
+                    except Exception as exc:   # futures already carry it
+                        self.auto_flush_error = exc
+            t = threading.Thread(target=_loop, name="engine-auto-flush",
+                                 daemon=True)
+            self._flusher, self._flusher_stop = t, stop
+            t.start()
+            return t
+
+    def stop_auto_flush(self) -> None:
+        with self._lock:
+            t, stop = self._flusher, self._flusher_stop
+            self._flusher = self._flusher_stop = None
+        if t is not None:
+            stop.set()
+            t.join(timeout=5.0)
+
     # --------------------------------------------------------------- flush
     def flush(self, graph_id: str | None = None) -> int:
         """Serve everything currently pending (for one graph, or all).
 
-        Queues drain in priority/deadline order; each graph gets exactly
+        Queues drain in priority/deadline order within each stream, with
+        launches round-robined across streams; each graph gets exactly
         one re-decision check *after* all of its pending requests were
         served — the flush boundary — so no in-flight future straddles a
         layout replacement.
         """
-        graphs: list[str] = []
-        for (gid, _), reqs in self._queues.items():
-            if reqs and (graph_id is None or gid == graph_id):
-                if gid not in graphs:
-                    graphs.append(gid)
-        served = 0
-        self._c_flushes.inc()
-        for gid in graphs:
-            served += self._flush_graph(gid)
-        return served
+        with self._lock:
+            graphs: list[str] = []
+            for (gid, _), reqs in self._queues.items():
+                if reqs and (graph_id is None or gid == graph_id):
+                    if gid not in graphs:
+                        graphs.append(gid)
+            return self._flush_graphs(graphs)
 
     def drain(self) -> int:
         """Flush until no request is pending anywhere (lifecycle close)."""
         served = 0
-        while self.pending():
-            served += self.flush()
+        with self._lock:
+            while self.pending():
+                served += self.flush()
         return served
+
+    def _expire(self, req: Request) -> None:
+        """Fail one still-pending request with `DeadlineExceeded` (called
+        from ``result()`` once the deadline has passed). No-op if a
+        concurrent flush already took it."""
+        with self._lock:
+            q = self._queues.get((req.graph_id, req.kernel))
+            if q is None or req not in q:
+                return        # already being served; result() re-checks
+            q.remove(req)
+            now = self.session.clock.now()
+            self._c_deadlines.inc()
+            self._c_expired.inc()
+            self._c_failed.inc()
+            self._g_pending.dec()
+            self._miss_window.record(True)
+            self.session.tracer.instant(
+                "expired", tid=REQUEST_TID_BASE + req.seq,
+                trace_id=req.trace_id, graph_id=req.graph_id,
+                kernel=req.kernel)
+            req.future._set_exception(DeadlineExceeded(
+                f"request {req.seq} ({req.graph_id}/{req.kernel}) missed "
+                f"its deadline by {now - req.deadline:.4f}s before any "
+                "flush served it", deadline=req.deadline, now=now))
 
     # ------------------------------------------------------ flush internals
     def _take_queues(self, graph_id: str) -> list[tuple[str, list[Request]]]:
@@ -333,40 +581,65 @@ class MicroBatchScheduler:
         taken.sort(key=lambda kv: min(r.order_key() for r in kv[1]))
         return taken
 
-    def _flush_graph(self, graph_id: str) -> int:
+    def _flush_graphs(self, graphs: list[str]) -> int:
+        """One flush boundary over ``graphs``: take every stream, then
+        round-robin launches one chunk per ``(graph_id, kernel)`` stream
+        per cycle. The graph order rotates between flushes (`_rr_cursor`),
+        so with `max_batch_sources` chunking no graph's burst can
+        monopolize consecutive launches across flushes either."""
         session = self.session
-        entry = session.registry.get(graph_id)
+        self._c_flushes.inc()
+        if not graphs:
+            return 0
+        if len(graphs) > 1:
+            lead = self._rr_cursor % len(graphs)
+            graphs = graphs[lead:] + graphs[:lead]
+        self._rr_cursor += 1
+        # streams: [graph_id, kernel, entry, chunk list] in fair-drain order
+        entries = {gid: session.registry.get(gid) for gid in graphs}
+        streams: list[list] = []
+        taken_reqs: list[Request] = []
+        for gid in graphs:
+            for kernel, reqs in self._take_queues(gid):
+                reqs.sort(key=Request.order_key)
+                taken_reqs.extend(reqs)
+                chunks = ([reqs] if kernel in GLOBAL else self._chunks(reqs))
+                streams.append([gid, kernel, entries[gid], chunks])
         served = 0
-        taken = self._take_queues(graph_id)
         try:
-            with session.tracer.span("flush", graph_id=graph_id,
-                                     requests=sum(len(r) for _, r in taken)):
-                for kernel, reqs in taken:
-                    reqs.sort(key=Request.order_key)
-                    if kernel in GLOBAL:
-                        self._serve_global(entry, kernel, reqs)
-                    else:
-                        for chunk in self._chunks(reqs):
+            with session.tracer.span("flush", graphs=len(graphs),
+                                     requests=len(taken_reqs)):
+                while streams:
+                    survivors: list[list] = []
+                    for stream in streams:
+                        gid, kernel, entry, chunks = stream
+                        chunk = chunks.pop(0)
+                        if kernel in GLOBAL:
+                            self._serve_global(entry, kernel, chunk)
+                        else:
                             self._serve_multi(entry, kernel, chunk)
-                    served += len(reqs)
+                        served += len(chunk)
+                        if chunks:
+                            survivors.append(stream)
+                    streams = survivors
         except Exception as exc:
             # a failed launch must not strand the rest of the flush set:
             # every taken-but-unserved future fails with the same cause
-            for _, reqs in taken:
-                for r in reqs:
-                    if not r.future.done():
-                        r.future._set_exception(exc)
-                        self._c_failed.inc()
-                        self._g_pending.dec()
+            for r in taken_reqs:
+                if not r.future._done:
+                    r.future._set_exception(exc)
+                    self._c_failed.inc()
+                    self._g_pending.dec()
             raise
         finally:
             # requests resolved before a mid-flush failure were genuinely
             # served: keep the counter consistent with their futures
             self._c_served.inc(served)
-        # flush boundary: all pending requests for this graph are answered
-        # and translated under the generation that served them — only now
-        # may the layout be replaced (skipped if the flush aborted above)
-        session._maybe_redecide(entry)
+        # flush boundary: all pending requests for these graphs are
+        # answered and translated under the generation that served them —
+        # only now may layouts be replaced (skipped if the flush aborted)
+        for gid in graphs:
+            session._maybe_redecide(entries[gid])
         return served
 
     def _chunks(self, reqs: list[Request]) -> list[list[Request]]:
@@ -387,10 +660,80 @@ class MicroBatchScheduler:
         return chunks
 
     def _serve_multi(self, entry, kernel: str, reqs: list[Request]) -> None:
-        """One vmapped launch for every request in ``reqs``; per-request
-        rows sliced back out of the (S, V) result."""
+        """One vmapped launch for the chunk's *uncached* sources; cached
+        rows come from the result cache (within-window dedup falls out of
+        the same lookup), per-request rows are reassembled per source."""
         session = self.session
+        cache = session.result_cache
         launch_begin = session.clock.now()
+        if cache is None:
+            self._serve_multi_uncached(entry, kernel, reqs, launch_begin)
+            return
+        gid, gen = entry.graph_id, entry.generation
+        rows: dict[int, np.ndarray] = {}       # source -> result row
+        missing: list[int] = []                # fresh sources, first-seen
+        missing_set: set[int] = set()
+        for r in reqs:
+            for s in map(int, r.sources):
+                if s in rows or s in missing_set:
+                    continue
+                row = cache.get(gid, gen, kernel, s)
+                if row is None:
+                    missing.append(s)
+                    missing_set.add(s)
+                else:
+                    rows[s] = row
+        wall, exchange = 0.0, None
+        if missing:
+            with session.tracer.span("coalesce", graph_id=gid, kernel=kernel,
+                                     requests=len(reqs),
+                                     cached_sources=len(rows)):
+                launch_sources = np.asarray(missing, dtype=np.int64)
+            try:
+                out, wall = session._launch(entry, kernel, launch_sources)
+            except Exception as exc:
+                self._fail_launch(reqs, exc)
+                raise
+            exchange = session._last_exchange(entry)
+            session.policy.observe_batch_sources(len(missing))
+            self._c_launches.inc()
+            hot = entry.hot_prefix_len
+            for i, s in enumerate(missing):
+                # copy: a slice view would pin the whole (S, V) launch
+                # array for as long as any one cached row is retained
+                row = out[i].copy()
+                rows[s] = row
+                cache.put(gid, gen, kernel, s, row,
+                          pinned=hot > 0 and int(entry.perm[s]) < hot)
+        else:
+            # every row came from memory — the whole chunk serves with no
+            # device work at all; make that visible on the engine track
+            with session.tracer.span("cache_hit", graph_id=gid,
+                                     kernel=kernel, requests=len(reqs),
+                                     sources=len(rows)):
+                pass
+        if len(reqs) > 1:
+            self._c_coalesced.inc(len(reqs))
+        # launch wall is shared pro-rata over freshly launched rows only:
+        # a fully cached request costs (and is charged) ~nothing
+        fresh = [sum(1 for s in map(int, r.sources) if s in missing_set)
+                 for r in reqs]
+        fresh_total = sum(fresh) or 1
+        with session.tracer.span("slice_out", graph_id=gid, kernel=kernel,
+                                 requests=len(reqs)):
+            for r, n_fresh in zip(reqs, fresh):
+                out_rows = np.stack([rows[int(s)] for s in r.sources])
+                self._account(entry, r, out_rows, wall,
+                              wall * (n_fresh / fresh_total), len(reqs),
+                              len(missing), exchange, launch_begin,
+                              cache_hits=r.num_sources - n_fresh,
+                              from_cache=not missing)
+
+    def _serve_multi_uncached(self, entry, kernel: str, reqs: list[Request],
+                              launch_begin: float) -> None:
+        """Cache-off path: pure coalescing, byte-identical to the PR 5
+        plane (duplicate sources ride the launch)."""
+        session = self.session
         with session.tracer.span("coalesce", graph_id=entry.graph_id,
                                  kernel=kernel, requests=len(reqs)):
             all_sources = np.concatenate([r.sources for r in reqs])
@@ -419,22 +762,42 @@ class MicroBatchScheduler:
 
     def _serve_global(self, entry, kernel: str, reqs: list[Request]) -> None:
         """One run, fanned out to every waiter (the result is
-        source-independent, so concurrent requests are duplicates)."""
+        source-independent, so concurrent requests are duplicates) — and
+        served straight from the result cache across flush windows."""
         session = self.session
+        cache = session.result_cache
         launch_begin = session.clock.now()
-        try:
-            out, wall = session._launch(entry, kernel, None)
-        except Exception as exc:
-            self._fail_launch(reqs, exc)
-            raise
-        exchange = session._last_exchange(entry)
-        self._c_launches.inc()
+        gid, gen = entry.graph_id, entry.generation
+        out = (cache.get(gid, gen, kernel, GLOBAL_SOURCE)
+               if cache is not None else None)
+        from_cache = out is not None
+        wall, exchange = 0.0, None
+        if out is None:
+            try:
+                out, wall = session._launch(entry, kernel, None)
+            except Exception as exc:
+                self._fail_launch(reqs, exc)
+                raise
+            exchange = session._last_exchange(entry)
+            self._c_launches.inc()
+            if cache is not None:
+                # global results are one row per graph and every request
+                # wants it: always worth pinning
+                cache.put(gid, gen, kernel, GLOBAL_SOURCE, out, pinned=True)
+            if len(reqs) > 1:
+                self._c_dedup.inc(len(reqs) - 1)
+        else:
+            with session.tracer.span("cache_hit", graph_id=gid,
+                                     kernel=kernel, requests=len(reqs)):
+                pass
+            self._c_dedup.inc(len(reqs))
         if len(reqs) > 1:
             self._c_coalesced.inc(len(reqs))
-            self._c_dedup.inc(len(reqs) - 1)
         for r in reqs:
             self._account(entry, r, out, wall, wall / len(reqs), len(reqs),
-                          0, exchange, launch_begin)
+                          0, exchange, launch_begin,
+                          cache_hits=1 if from_cache else 0,
+                          from_cache=from_cache)
 
     def _fail_launch(self, reqs: list[Request], exc: BaseException) -> None:
         """One launch raised: fail its riders, count the outcome."""
@@ -446,7 +809,8 @@ class MicroBatchScheduler:
 
     def _account(self, entry, req: Request, result: np.ndarray, wall: float,
                  wall_share: float, sharing: int, batch_sources: int,
-                 exchange: dict | None, launch_begin: float) -> None:
+                 exchange: dict | None, launch_begin: float,
+                 cache_hits: int = 0, from_cache: bool = False) -> None:
         """Resolve one future: ledger, realized-volume, telemetry,
         latency histograms, and the request's trace track."""
         session = self.session
@@ -457,6 +821,8 @@ class MicroBatchScheduler:
         missed = req.deadline is not None and served_at > req.deadline
         if missed:
             self._c_deadlines.inc()
+        if req.deadline is not None:
+            self._miss_window.record(missed)
         labels = {"graph_id": req.graph_id, "kernel": req.kernel}
         queue_wait = launch_begin - req.enqueued_at
         serve_latency = served_at - req.enqueued_at
@@ -480,7 +846,8 @@ class MicroBatchScheduler:
                     args=span_args)
         tracer.emit("serve", launch_begin, served_at, tid=tid,
                     args={**span_args, "coalesced_with": sharing - 1,
-                          "deadline_missed": missed})
+                          "deadline_missed": missed,
+                          "served_from_cache": from_cache})
         self._g_pending.dec()
         req.future.telemetry = {
             "kernel": req.kernel,
@@ -494,6 +861,9 @@ class MicroBatchScheduler:
             "launch_batch_sources": batch_sources,
             "queue_seconds": serve_latency,
             "deadline_missed": missed,
+            "cache_hit_sources": cache_hits,
+            "served_from_cache": from_cache,
+            "degraded": req.degraded,
             "exchange": exchange,
             "trace_id": req.trace_id,
         }
@@ -502,7 +872,9 @@ class MicroBatchScheduler:
     # ----------------------------------------------------------- telemetry
     def telemetry(self) -> dict:
         """Pre-obs dict shape (a view over the metrics registry) plus the
-        launch/request failure counters."""
+        launch/request failure, auto-flush, admission, and result-cache
+        counters."""
+        cache = self.session.result_cache
         return {
             "requests_enqueued": self.requests_enqueued,
             "requests_served": self.requests_served,
@@ -515,8 +887,19 @@ class MicroBatchScheduler:
             "launches_failed": self.launches_failed,
             "requests_failed": self.requests_failed,
             "max_batch_sources": self.max_batch_sources,
+            "max_delay": self.max_delay,
+            "auto_flushes": self.auto_flushes,
+            "requests_expired": self.requests_expired,
+            "admission": (self.admission.as_dict()
+                          if self.admission is not None else None),
+            "admission_rejected": self.admission_rejected,
+            "admission_degraded": self.admission_degraded,
+            "admission_shed": self.admission_shed,
+            "deadline_miss_rate": round(self._miss_window.rate, 4),
+            "result_cache": cache.stats() if cache is not None else None,
         }
 
 
-__all__ = ["LABEL_KERNELS", "MicroBatchScheduler", "QueryFuture", "Request",
+__all__ = ["AdmissionRejected", "DeadlineExceeded", "LABEL_KERNELS",
+           "MicroBatchScheduler", "QueryFuture", "Request",
            "canonical_component_labels", "source_bucket"]

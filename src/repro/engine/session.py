@@ -47,8 +47,9 @@ from ..cache.sim import estimate_miss_rate, scaled_config
 from ..core.csr import Graph
 from .executor import MULTI_SOURCE, BatchedExecutor
 from .obs import Clock, MetricsRegistry, ProfilerHook, Tracer
-from .policy import PolicyDecision, ReorderPolicy
+from .policy import AdmissionPolicy, PolicyDecision, ReorderPolicy
 from .registry import GraphEntry, GraphRegistry
+from .result_cache import ResultCache
 from .scheduler import (LABEL_KERNELS, MicroBatchScheduler, QueryFuture,
                         canonical_component_labels)
 
@@ -137,6 +138,11 @@ class EngineSession:
                  num_shards: int | None = None,
                  sharded_gain_discount: float = 0.5,
                  max_batch_sources: int | None = None,
+                 max_delay: float | None = 0.25,
+                 auto_flush_interval: float | None = None,
+                 admission: AdmissionPolicy | None = None,
+                 result_cache: "ResultCache | bool" = True,
+                 result_cache_entries: int = 4096,
                  clock: Clock | None = None,
                  tracer: Tracer | None = None,
                  profiler_dir: str | None = None,
@@ -171,8 +177,21 @@ class EngineSession:
                                      "registration)")
         self._c_redecisions = m.counter("engine_redecisions_total",
                                         "re-decisions that replaced a layout")
+        # cross-request result cache (result_cache.py): True builds one in
+        # the session's metrics namespace, False disables it, or pass a
+        # pre-configured ResultCache (its own metrics registry is kept)
+        if isinstance(result_cache, ResultCache):
+            self.result_cache: ResultCache | None = result_cache
+        elif result_cache:
+            self.result_cache = ResultCache(max_entries=result_cache_entries,
+                                            registry=m)
+        else:
+            self.result_cache = None
         self.scheduler = MicroBatchScheduler(
-            self, max_batch_sources=max_batch_sources)
+            self, max_batch_sources=max_batch_sources,
+            max_delay=max_delay, admission=admission)
+        if auto_flush_interval is not None:
+            self.scheduler.start_auto_flush(auto_flush_interval)
 
     def metrics(self) -> MetricsRegistry:
         """The session-wide metrics registry (``.snapshot()`` /
@@ -185,6 +204,22 @@ class EngineSession:
 
     def stop_profiler(self) -> bool:
         return self.profiler.stop()
+
+    # ----------------------------------------------------------- lifecycle
+    def close(self, drain: bool = True) -> None:
+        """Stop the background auto-flush thread (if any) and, by default,
+        drain every pending request so no future is left dangling."""
+        self.scheduler.stop_auto_flush()
+        if drain:
+            self.scheduler.drain()
+
+    def __enter__(self) -> "EngineSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # on an exception path still tear the thread down, but don't let a
+        # drain launch shadow the original error
+        self.close(drain=exc_type is None)
 
     # ----------------------------------------------------------- register
     def register(self, graph: Graph, graph_id: str | None = None,
@@ -210,6 +245,10 @@ class EngineSession:
         """
         entry.decision = decision
         entry.generation += 1
+        if self.result_cache is not None:
+            # the generation key already makes the old layout's rows
+            # unreachable; this reclaims exactly the stale graph's memory
+            self.result_cache.invalidate_graph(entry.graph_id)
         t0 = self.clock.now()
         with self.tracer.span("reorder", graph_id=entry.graph_id,
                               scheme=decision.scheme,
@@ -245,6 +284,12 @@ class EngineSession:
         entry.backend = decision.backend
         entry.bucket_shape = entry.handle.bucket
         entry.hot_prefix_fraction = decision.hot_prefix_fraction
+        # locality layouts pack hubs into a low-id prefix; identity/random
+        # layouts have no hot prefix to pin result-cache entries against
+        entry.hot_prefix_len = (
+            0 if decision.scheme in ("original", "random")
+            else int(round(entry.probes.hub_fraction
+                           * entry.graph.num_vertices)))
         entry.arrays = entry.handle.arrays  # None when served sharded
 
         rec = self.policy.record(entry.graph_id, decision, before, after,
@@ -363,6 +408,13 @@ class EngineSession:
     def drain(self) -> int:
         """Flush until no request is pending (lifecycle close)."""
         return self.scheduler.drain()
+
+    def poll(self) -> int:
+        """Auto-flush tick: serve any request past its deadline or older
+        than ``max_delay``. Runs implicitly on every ``enqueue`` and
+        ``QueryFuture.done()`` — call it directly from your own event
+        loop, or let ``auto_flush_interval`` run it from a thread."""
+        return self.scheduler.poll()
 
     def submit(self, graph_id: str, kernel: str,
                sources=None) -> np.ndarray:

@@ -22,7 +22,10 @@ HIST_SNAPSHOT_KEYS = {"count", "sum", "min", "max", "p50", "p90", "p99",
 SCHEDULER_TELEMETRY_KEYS = [
     "requests_enqueued", "requests_served", "pending", "launches",
     "coalesced_requests", "dedup_hits", "flushes", "deadlines_missed",
-    "launches_failed", "requests_failed", "max_batch_sources"]
+    "launches_failed", "requests_failed", "max_batch_sources",
+    "max_delay", "auto_flushes", "requests_expired", "admission",
+    "admission_rejected", "admission_degraded", "admission_shed",
+    "deadline_miss_rate", "result_cache"]
 
 
 @pytest.fixture(scope="module")
@@ -297,6 +300,10 @@ def test_scheduler_telemetry_golden_schema(obs_graph):
     session.submit(gid, "bfs", [0])
     t = session.scheduler.telemetry()
     assert list(t) == SCHEDULER_TELEMETRY_KEYS
+    assert t["admission"] is None          # none configured by default
+    assert set(t["result_cache"]) == {"entries", "pinned", "max_entries",
+                                      "hits", "misses", "evictions",
+                                      "hit_rate"}
     top = session.telemetry()
     assert set(top) == {"executor", "scheduler", "policy", "calibration",
                         "redecisions", "graphs"}
@@ -311,9 +318,19 @@ def test_scheduler_telemetry_golden_schema(obs_graph):
                  "engine_requests_served_total", "engine_launches_total",
                  "engine_flushes_total", "engine_graphs_registered_total",
                  "engine_reorders_total", "engine_queries_total",
-                 "engine_compile_cache_misses_total"):
+                 "engine_compile_cache_misses_total",
+                 "engine_auto_flushes_total",
+                 "engine_requests_expired_total",
+                 "engine_admission_rejected_total",
+                 "engine_admission_degraded_total",
+                 "engine_admission_shed_total",
+                 "engine_result_cache_hits_total",
+                 "engine_result_cache_misses_total",
+                 "engine_result_cache_evictions_total"):
         assert name in snap["counters"], name
     assert "engine_pending_requests" in snap["gauges"]
+    assert "engine_result_cache_entries" in snap["gauges"]
+    assert "engine_result_cache_pinned" in snap["gauges"]
     for name in ("engine_queue_wait_seconds", "engine_serve_seconds",
                  "engine_launch_wall_seconds", "engine_reorder_seconds"):
         assert name in snap["histograms"], name

@@ -1,0 +1,215 @@
+"""Result cache: LRU/pinning mechanics, invalidation, and the bit-identity
+property.
+
+The correctness contract is absolute: a cache-served row must be
+bit-identical to fresh execution, across any interleaving of enqueues,
+flushes, and re-decision generation bumps — and a generation bump must
+make every row of the old layout unreachable (the poison-sentinel test
+proves both directions: the cache really serves, and a bump really
+stops it).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.engine import EngineSession, ResultCache
+from repro.engine.result_cache import GLOBAL_SOURCE
+
+FLOAT_KERNELS = ("pr", "bc")
+
+
+def _session(**kw) -> EngineSession:
+    kw.setdefault("redecide_min_queries", 10**6)
+    return EngineSession(**kw)
+
+
+def _assert_matches(kernel: str, got, want) -> None:
+    got, want = np.asarray(got), np.asarray(want)
+    if kernel in FLOAT_KERNELS:
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------------- unit mechanics
+def _row(v: int) -> np.ndarray:
+    return np.full(4, v, dtype=np.int64)
+
+
+def test_lru_evicts_least_recently_used():
+    c = ResultCache(max_entries=2)
+    c.put("g", 1, "bfs", 0, _row(0))
+    c.put("g", 1, "bfs", 1, _row(1))
+    assert c.get("g", 1, "bfs", 0) is not None   # refresh 0's recency
+    c.put("g", 1, "bfs", 2, _row(2))             # evicts 1, not 0
+    assert c.evictions == 1
+    assert c.get("g", 1, "bfs", 1) is None
+    assert c.get("g", 1, "bfs", 0) is not None
+    assert c.entries == 2
+
+
+def test_pinned_entries_survive_lru_pressure():
+    c = ResultCache(max_entries=1)
+    c.put("g", 1, "bfs", 0, _row(0), pinned=True)
+    for s in range(1, 5):
+        c.put("g", 1, "bfs", s, _row(s))
+    assert c.pinned_count == 1
+    assert c.get("g", 1, "bfs", 0) is not None   # never evicted
+    assert c.entries == 2                        # 1 pinned + 1 LRU slot
+    assert c.evictions == 3
+
+
+def test_pinned_overflow_demotes_to_lru():
+    c = ResultCache(max_entries=8, max_pinned=1)
+    c.put("g", 1, "bfs", 0, _row(0), pinned=True)
+    c.put("g", 1, "bfs", 1, _row(1), pinned=True)   # pinned store full
+    assert c.pinned_count == 1
+    assert c.get("g", 1, "bfs", 1) is not None      # still cached, just LRU
+
+
+def test_invalidate_graph_is_surgical():
+    c = ResultCache()
+    c.put("a", 1, "bfs", 0, _row(0), pinned=True)
+    c.put("a", 1, "bfs", 1, _row(1))
+    c.put("b", 1, "bfs", 0, _row(7))
+    assert c.invalidate_graph("a") == 2
+    assert c.get("a", 1, "bfs", 0) is None
+    assert c.get("a", 1, "bfs", 1) is None
+    assert c.get("b", 1, "bfs", 0) is not None      # other graph untouched
+    assert c.pinned_count == 0
+
+
+def test_generation_is_part_of_the_key():
+    c = ResultCache()
+    c.put("g", 1, "bfs", 0, _row(1))
+    assert c.get("g", 2, "bfs", 0) is None          # new layout, no hit
+    c.put("g", 2, "bfs", 0, _row(2))
+    assert int(c.get("g", 1, "bfs", 0)[0]) == 1     # old gen still distinct
+    assert int(c.get("g", 2, "bfs", 0)[0]) == 2
+
+
+def test_stats_and_validation():
+    c = ResultCache(max_entries=4)
+    c.put("g", 1, "pr", GLOBAL_SOURCE, _row(0), pinned=True)
+    c.get("g", 1, "pr", GLOBAL_SOURCE)
+    c.get("g", 1, "pr", 5)
+    s = c.stats()
+    assert s["hits"] == 1 and s["misses"] == 1 and s["hit_rate"] == 0.5
+    assert s["entries"] == 1 and s["pinned"] == 1
+    with pytest.raises(ValueError):
+        ResultCache(max_entries=0)
+
+
+# ------------------------------------------------- engine-level invariants
+def test_cache_metrics_export_through_prometheus(plc_graph):
+    session = _session()
+    gid = session.register(plc_graph, expected_queries=256)
+    session.submit(gid, "bfs", [0])
+    session.submit(gid, "bfs", [0])                 # guaranteed hit
+    text = session.metrics().to_prometheus()
+    for name in ("engine_result_cache_hits_total",
+                 "engine_result_cache_misses_total",
+                 "engine_result_cache_evictions_total",
+                 "engine_result_cache_pinned",
+                 "engine_result_cache_entries"):
+        assert name in text
+    snap = session.metrics().snapshot()
+    assert snap["counters"]["engine_result_cache_hits_total"] >= 1
+    assert snap["gauges"]["engine_result_cache_entries"] >= 1
+
+
+def test_hot_prefix_sources_are_pinned(plc_graph):
+    session = _session()
+    gid = session.register(plc_graph, expected_queries=256)
+    entry = session.registry.get(gid)
+    assert entry.decision.scheme != "original"
+    assert entry.hot_prefix_len > 0
+    hot_original = int(np.argmin(entry.perm))   # maps to served id 0: hot
+    cold_original = int(np.argmax(entry.perm))  # maps to last served id
+    session.submit(gid, "bfs", [hot_original, cold_original])
+    assert session.result_cache.pinned_count == 1
+    assert session.result_cache.entries == 2
+
+
+def test_poison_sentinel_proves_cache_serves_and_bump_invalidates(plc_graph):
+    """Both directions of the staleness contract: a poisoned row under the
+    current generation IS served (so the cache is actually on the path),
+    and a generation bump makes it unreachable (so a re-decision can
+    never serve a stale-layout row)."""
+    session = _session()
+    gid = session.register(plc_graph, expected_queries=256)
+    entry = session.registry.get(gid)
+    want = np.asarray(session.submit(gid, "bfs", [0]))
+    sentinel = np.full_like(want[0], -77)
+    session.result_cache.put(gid, entry.generation, "bfs", 0, sentinel,
+                             pinned=True)
+    got = np.asarray(session.submit(gid, "bfs", [0]))
+    assert (got[0] == -77).all()                    # cache truly serves
+    gen_before = entry.generation
+    session._apply_decision(entry, entry.decision)  # re-decision bump
+    assert entry.generation == gen_before + 1
+    got2 = np.asarray(session.submit(gid, "bfs", [0]))
+    np.testing.assert_array_equal(got2, want)       # fresh, not the poison
+
+
+def test_redecision_invalidates_cached_rows(plc_graph):
+    session = EngineSession(redecide_factor=2.0, redecide_min_queries=4)
+    gid = session.register(plc_graph, expected_queries=1)
+    rng = np.random.default_rng(5)
+    for _ in range(12):
+        session.enqueue(gid, "bfs",
+                        rng.integers(0, plc_graph.num_vertices, size=2))
+    session.drain()                     # re-decision at the flush boundary
+    entry = session.registry.get(gid)
+    assert entry.generation > 1
+    # every surviving entry belongs to the current generation
+    cache = session.result_cache
+    keys = list(cache._lru) + list(cache._pinned)
+    assert all(k[1] == entry.generation for k in keys) or not keys
+
+
+# ------------------------------------------------------ bit-identity property
+def test_cache_interleaving_property(tiny_graph):
+    """Hypothesis: across random enqueue/flush/generation-bump
+    interleavings, every future resolves bit-identical to a fresh
+    sequential session — cache hits, partial hits, and invalidations
+    included."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    n = tiny_graph.num_vertices
+    enq = st.tuples(st.just("enqueue"),
+                    st.sampled_from(("bfs", "sssp", "pr", "cc")),
+                    st.lists(st.integers(min_value=0, max_value=n - 1),
+                             min_size=1, max_size=3))
+    op = st.one_of(enq, st.just(("flush",)), st.just(("bump",)))
+
+    @settings(max_examples=12, deadline=None)
+    @given(ops=st.lists(op, min_size=1, max_size=10))
+    def check(ops):
+        session = _session()
+        reference = _session(result_cache=False)
+        gid = session.register(tiny_graph, graph_id="c",
+                               expected_queries=256)
+        rid = reference.register(tiny_graph, graph_id="r",
+                                 expected_queries=256)
+        entry = session.registry.get(gid)
+        futures = []
+        for item in ops:
+            if item[0] == "enqueue":
+                _, kernel, srcs = item
+                sources = (np.asarray(srcs)
+                           if kernel in ("bfs", "sssp") else None)
+                futures.append((kernel, sources,
+                                session.enqueue(gid, kernel, sources)))
+            elif item[0] == "flush":
+                session.flush()
+            else:  # bump: re-apply the decision -> generation += 1
+                session._apply_decision(entry, entry.decision)
+        session.drain()
+        for kernel, sources, fut in futures:
+            _assert_matches(kernel, fut.result(),
+                            reference.submit(rid, kernel, sources))
+
+    check()

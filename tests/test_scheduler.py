@@ -18,7 +18,9 @@ import pytest
 
 from conftest import run_forced_four_devices
 from repro.core.baselines import cc_baseline
-from repro.engine import (EngineSession, QueryFuture, ReorderPolicy,
+from repro.engine import (AdmissionPolicy, AdmissionRejected,
+                          DeadlineExceeded, EngineSession, ManualClock,
+                          QueryFuture, ReorderPolicy,
                           canonical_component_labels, estimate_device_bytes)
 from repro.engine.backends import source_bucket
 
@@ -109,11 +111,14 @@ def test_multi_source_requests_coalesce_into_one_launch(plc_graph):
 
 def test_coalesced_batch_fills_source_bucket(plc_graph):
     """The combined launch pads to one power-of-two bucket, not per-request
-    buckets: 3+1+4+2 = 10 sources ride a 16-slot bucket in one launch."""
+    buckets: 3+1+4+2 = 10 distinct sources ride a 16-slot bucket in one
+    launch."""
     session = _session()
     gid = session.register(plc_graph, expected_queries=256)
+    base = 0
     for n in (3, 1, 4, 2):
-        session.enqueue(gid, "bfs", np.arange(n))
+        session.enqueue(gid, "bfs", np.arange(base, base + n))
+        base += n
     session.flush()
     keys = session.executor.single.telemetry()["cached_keys"]
     assert len(keys) == 1  # one compiled shape for the whole burst
@@ -123,10 +128,11 @@ def test_coalesced_batch_fills_source_bucket(plc_graph):
 def test_max_batch_sources_chunks_in_order(plc_graph):
     session = _session(max_batch_sources=4)
     gid = session.register(plc_graph, expected_queries=256)
-    futs = [session.enqueue(gid, "bfs", np.arange(3)) for _ in range(3)]
+    futs = [session.enqueue(gid, "bfs", np.arange(i * 3, i * 3 + 3))
+            for i in range(3)]
     session.flush()
-    # 3+3 > 4, so chunks are [r0], wait no: greedy packs r0 (3), r1 would
-    # exceed 4 -> new chunk [r1], then [r2]: 3 launches of 3 sources
+    # greedy packs r0 (3 sources), r1 would exceed the cap of 4 -> new
+    # chunk [r1], then [r2]: 3 launches of 3 sources each
     assert session.scheduler.launches == 3
     idx = [f.telemetry["launch_index"] for f in futs]
     assert idx == sorted(idx)  # FIFO within equal priority
@@ -258,8 +264,8 @@ def test_policy_observes_scheduler_batches(plc_graph):
     session = _session()
     gid = session.register(plc_graph, expected_queries=256)
     assert session.policy.batch_sources_hint == 1
-    for n in (8, 8, 8):
-        session.enqueue(gid, "bfs", np.arange(n))
+    for i in range(3):
+        session.enqueue(gid, "bfs", np.arange(i * 8, i * 8 + 8))
     session.flush()   # one coalesced 24-source launch observed
     assert session.policy.batches_observed == 1
     assert session.policy.batch_sources_hint == source_bucket(24)
@@ -390,6 +396,246 @@ def test_interleaving_sharded(plc_graph):
     _run_interleaving(plc_graph, specs,
                       session_factory=lambda: _session(
                           device_budget_bytes=1024))
+
+
+# ------------------------------------------------------------ result cache
+def test_result_cache_serves_across_flush_windows(plc_graph):
+    """A repeat of already-served sources costs no launch: rows come out
+    of the (graph, generation, kernel, source) cache, bit-identical and
+    order-correct, and the serve is visible as a cache_hit span."""
+    session = _session()
+    gid = session.register(plc_graph, expected_queries=256)
+    f1 = session.enqueue(gid, "bfs", [0, 1, 2])
+    session.flush()
+    assert session.scheduler.launches == 1
+    f2 = session.enqueue(gid, "bfs", [2, 1, 0])
+    session.flush()
+    assert session.scheduler.launches == 1          # no second launch
+    assert f2.telemetry["served_from_cache"] is True
+    assert f2.telemetry["cache_hit_sources"] == 3
+    assert f2.telemetry["launch_batch_sources"] == 0
+    np.testing.assert_array_equal(np.asarray(f2.result()),
+                                  np.asarray(f1.result())[[2, 1, 0]])
+    assert session.result_cache.hits >= 3
+    names = {e["name"] for e in session.tracer.to_chrome()["traceEvents"]}
+    assert "cache_hit" in names
+
+
+def test_result_cache_partial_hit_launches_only_missing(plc_graph):
+    session = _session()
+    gid = session.register(plc_graph, expected_queries=256)
+    session.enqueue(gid, "bfs", [4, 5])
+    session.flush()
+    f = session.enqueue(gid, "bfs", [5, 6])        # 5 cached, 6 fresh
+    session.flush()
+    assert session.scheduler.launches == 2
+    assert f.telemetry["launch_batch_sources"] == 1  # only source 6 launched
+    assert f.telemetry["cache_hit_sources"] == 1
+    assert f.telemetry["served_from_cache"] is False
+    _assert_matches("bfs", f.result(),
+                    _session_submit_reference(plc_graph, "bfs", [5, 6]))
+
+
+def test_within_window_duplicate_sources_dedup(plc_graph):
+    """Two requests asking the same sources in one flush share one launch
+    of the *unique* sources — the within-window form of the cache."""
+    session = _session()
+    gid = session.register(plc_graph, expected_queries=256)
+    f1 = session.enqueue(gid, "bfs", [0, 1])
+    f2 = session.enqueue(gid, "bfs", [1, 0])
+    session.flush()
+    assert session.scheduler.launches == 1
+    assert f1.telemetry["launch_batch_sources"] == 2   # unique, not 4
+    np.testing.assert_array_equal(np.asarray(f1.result())[[1, 0]],
+                                  np.asarray(f2.result()))
+    _assert_matches("bfs", f1.result(),
+                    _session_submit_reference(plc_graph, "bfs", [0, 1]))
+
+
+def test_global_kernels_cache_across_windows(plc_graph):
+    session = _session()
+    gid = session.register(plc_graph, expected_queries=256)
+    p1 = session.submit(gid, "pr")
+    before = session.executor.queries_run
+    p2 = session.submit(gid, "pr")                  # across flush windows
+    assert session.executor.queries_run == before   # zero device work
+    np.testing.assert_array_equal(p1, p2)
+
+
+def test_result_cache_disabled_matches_legacy_plane(plc_graph):
+    """``result_cache=False`` restores the PR 5 coalescing exactly:
+    duplicate sources ride the launch and repeats re-launch."""
+    session = _session(result_cache=False)
+    assert session.result_cache is None
+    gid = session.register(plc_graph, expected_queries=256)
+    f1 = session.enqueue(gid, "bfs", [0, 1])
+    f2 = session.enqueue(gid, "bfs", [1, 0])
+    session.flush()
+    assert session.scheduler.launches == 1
+    assert f1.telemetry["launch_batch_sources"] == 4   # dupes included
+    session.enqueue(gid, "bfs", [0, 1])
+    session.flush()
+    assert session.scheduler.launches == 2             # repeat re-launches
+    assert session.scheduler.telemetry()["result_cache"] is None
+    _assert_matches("bfs", f2.result(),
+                    _session_submit_reference(plc_graph, "bfs", [1, 0]))
+
+
+# ------------------------------------------------------- multi-graph fairness
+def test_round_robin_across_graphs_with_chunking(plc_graph, tiny_graph):
+    """With max_batch_sources chunking, launches alternate between graphs
+    instead of one graph's burst monopolizing consecutive launches."""
+    session = _session(max_batch_sources=2, result_cache=False)
+    g1 = session.register(plc_graph, graph_id="g1", expected_queries=256)
+    g2 = session.register(tiny_graph, graph_id="g2", expected_queries=256)
+    futs1 = [session.enqueue(g1, "bfs", [i]) for i in range(4)]
+    futs2 = [session.enqueue(g2, "bfs", [i]) for i in range(4)]
+    session.flush()
+    idx1 = sorted({f.telemetry["launch_index"] for f in futs1})
+    idx2 = sorted({f.telemetry["launch_index"] for f in futs2})
+    # two chunks per graph, interleaved: g1 -> {1, 3}, g2 -> {2, 4} (not
+    # g1 taking 1-2 and starving g2 until 3-4)
+    assert idx1 == [1, 3] and idx2 == [2, 4]
+
+
+def test_flush_rotation_changes_leading_graph(plc_graph, tiny_graph):
+    """The graph that leads a multi-graph flush rotates between flushes,
+    so repeated bursts don't always pay graph-order latency to the same
+    victim."""
+    session = _session(result_cache=False)
+    g1 = session.register(plc_graph, graph_id="g1", expected_queries=256)
+    g2 = session.register(tiny_graph, graph_id="g2", expected_queries=256)
+
+    def burst():
+        f1 = session.enqueue(g1, "bfs", [0])
+        f2 = session.enqueue(g2, "bfs", [0])
+        session.flush()
+        return (f1.telemetry["launch_index"], f2.telemetry["launch_index"])
+
+    a1, b1 = burst()
+    a2, b2 = burst()
+    assert (a1 < b1) != (a2 < b2)    # lead alternates across flushes
+
+
+# ------------------------------------------------------ auto-flush / polling
+def test_poll_flushes_overdue_requests_on_enqueue(plc_graph):
+    clock = ManualClock()
+    session = _session(clock=clock, max_delay=0.1)
+    gid = session.register(plc_graph, expected_queries=256)
+    f1 = session.enqueue(gid, "bfs", [0])
+    assert not f1._done
+    clock.advance(0.2)               # f1 is now older than max_delay
+    f2 = session.enqueue(gid, "bfs", [1])   # piggy-backed poll fires
+    assert f1._done and f2._done
+    assert session.scheduler.auto_flushes == 1
+
+
+def test_done_polls_the_scheduler(plc_graph):
+    clock = ManualClock()
+    session = _session(clock=clock, max_delay=0.1)
+    gid = session.register(plc_graph, expected_queries=256)
+    fut = session.enqueue(gid, "bfs", [0])
+    assert not fut.done()            # not overdue yet: still pending
+    clock.advance(0.2)
+    assert fut.done()                # done() ticked the auto-flush
+    assert session.scheduler.auto_flushes == 1
+
+
+def test_deadline_triggers_poll_before_max_delay(plc_graph):
+    clock = ManualClock()
+    session = _session(clock=clock, max_delay=60.0)
+    gid = session.register(plc_graph, expected_queries=256)
+    fut = session.enqueue(gid, "bfs", [0], deadline_seconds=0.05)
+    clock.advance(0.06)              # way below max_delay, past deadline
+    assert session.poll() == 1 and fut._done
+    assert fut.telemetry["deadline_missed"] is True
+
+
+def test_background_auto_flush_thread(plc_graph):
+    import time
+    session = _session(max_delay=0.05, auto_flush_interval=0.02)
+    gid = session.register(plc_graph, expected_queries=256)
+    fut = session.enqueue(gid, "bfs", [0])
+    deadline = time.monotonic() + 10.0
+    while not fut._done and time.monotonic() < deadline:
+        time.sleep(0.01)             # no flush()/poll()/done() calls here
+    assert fut._done, "background thread never served the request"
+    assert session.scheduler.auto_flushes >= 1
+    assert session.scheduler.auto_flush_error is None
+    session.close()
+    assert session.scheduler._flusher is None
+
+
+# --------------------------------------------------- deadlines / admission
+def test_result_raises_deadline_exceeded_when_expired(plc_graph):
+    clock = ManualClock()
+    session = _session(clock=clock, max_delay=None)
+    gid = session.register(plc_graph, expected_queries=256)
+    fut = session.enqueue(gid, "bfs", [0], deadline_seconds=0.5)
+    clock.advance(1.0)
+    with pytest.raises(DeadlineExceeded):
+        fut.result()
+    assert fut.exception() is not None
+    assert session.scheduler.pending() == 0      # removed from the queue
+    assert session.scheduler.requests_expired == 1
+    assert session.scheduler.deadlines_missed == 1
+    assert session.scheduler.requests_failed == 1
+    assert session.scheduler.launches == 0       # no wasted device work
+
+
+def test_admission_rejects_at_queue_cap(plc_graph):
+    session = _session(admission=AdmissionPolicy(max_pending=2),
+                       max_delay=None)
+    gid = session.register(plc_graph, expected_queries=256)
+    futs = [session.enqueue(gid, "bfs", [i]) for i in range(2)]
+    with pytest.raises(AdmissionRejected) as exc_info:
+        session.enqueue(gid, "bfs", [9])
+    assert exc_info.value.pending == 2 and not exc_info.value.shed
+    assert session.scheduler.admission_rejected == 1
+    assert session.scheduler.requests_enqueued == 2
+    session.drain()
+    assert all(f.done() for f in futs)           # admitted traffic unharmed
+
+
+def test_admission_degrades_to_best_effort(plc_graph):
+    session = _session(
+        admission=AdmissionPolicy(max_pending=1, overload="degrade"),
+        max_delay=None)
+    gid = session.register(plc_graph, expected_queries=256)
+    first = session.enqueue(gid, "bfs", [0], priority=5)
+    over = session.enqueue(gid, "bfs", [1], priority=5, deadline_seconds=9.0)
+    assert over.request.degraded
+    assert over.request.priority == -1 and over.request.deadline is None
+    assert session.scheduler.admission_degraded == 1
+    session.flush()
+    # degraded request drains after the fully admitted one
+    assert first.telemetry["launch_index"] <= over.telemetry["launch_index"]
+    assert over.telemetry["degraded"] is True
+
+
+def test_admission_sheds_best_effort_under_missed_deadlines(plc_graph):
+    clock = ManualClock()
+    adm = AdmissionPolicy(max_pending=8, soft_fraction=0.25,
+                          shed_miss_rate=0.5, min_miss_samples=4)
+    session = _session(clock=clock, admission=adm, max_delay=None)
+    gid = session.register(plc_graph, expected_queries=256)
+    # miss a batch of deadlines to arm the shed window
+    for i in range(4):
+        session.enqueue(gid, "bfs", [i], deadline_seconds=0.01)
+    clock.advance(1.0)
+    session.flush()
+    assert session.scheduler.deadlines_missed == 4
+    # queue depth at the soft limit + hot miss window: best-effort sheds,
+    # deadline-carrying traffic still gets in
+    keep = [session.enqueue(gid, "bfs", [i], deadline_seconds=30.0)
+            for i in range(10, 12)]
+    with pytest.raises(AdmissionRejected) as exc_info:
+        session.enqueue(gid, "bfs", [20])        # best-effort arrival
+    assert exc_info.value.shed
+    assert session.scheduler.admission_shed == 1
+    urgent = session.enqueue(gid, "bfs", [21], deadline_seconds=30.0)
+    session.drain()
+    assert urgent.done() and all(f.done() for f in keep)
 
 
 def test_scheduler_four_forced_devices():
