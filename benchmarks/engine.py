@@ -47,6 +47,11 @@ Phases:
     query, latency percentiles, bit-identity sampling), then ~3.5x
     capacity with and without bounded-queue admission control (p99
     queue wait bounded vs saturated, rejects counted).
+11. **Churn** — sustained Zipf load with concurrent edge churn through
+    ``update_graph``: the incremental patch tier re-permutes per delta
+    at a wall cost >= 10x below a measured full LOrder pass, serve p99
+    stays bounded across generations, and post-churn results stay
+    bit-identical to a fresh session on the final mutated graph.
 
 Emits benchmarks/results/engine.json.
 """
@@ -760,8 +765,109 @@ def _phase_fused(scale):
     return out
 
 
+def _phase_churn(scale, rounds: int = 8, queries_per_round: int = 12):
+    """Sustained Zipf load with concurrent edge churn (dynamic graphs).
+
+    One hub-heavy graph registered at high expected volume (a locality
+    layout with a packed hot prefix), then ``rounds`` of: a burst of
+    Zipf-over-degree BFS requests through the request plane, followed by
+    an ``update_graph`` delta (remove random existing edges, add the
+    same count of random ones) served by the **incremental patch tier**.
+    Reports the patch-tier reorder wall against a measured full LOrder
+    pass on the final graph (the acceptance bar is >= 10x cheaper),
+    serve-latency percentiles across the churning run, and bit-identity
+    of post-churn results against a fresh session registered directly on
+    the final mutated graph.
+    """
+    import time
+
+    from repro.core.lorder import lorder
+    from repro.engine import EngineSession
+    from repro.core.generators import powerlaw_community
+    from repro.engine.obs import merge_histogram_snapshots
+
+    n = max(1500, int(12_000 * scale))
+    g = powerlaw_community(n, avg_degree=10.0, seed=71, name="churn")
+    churn_edges = max(64, n // 25)
+    rng = np.random.default_rng(37)
+    by_degree = np.argsort(-np.asarray(g.degree, dtype=np.int64))
+
+    s = EngineSession(redecide_min_queries=10**9, async_full_reorder=False)
+    s.register(g, graph_id="churn", expected_queries=4096)
+    entry = s.registry.get("churn")
+    s.submit("churn", "bfs", np.arange(8))          # warm the compile
+
+    patch_walls, mutate_walls = [], []
+    for _ in range(rounds):
+        srcs = by_degree[(rng.zipf(1.5, size=queries_per_round) - 1) % n]
+        futs = [s.enqueue("churn", "bfs", [int(x)]) for x in srcs]
+        s.flush()
+        assert all(f.done() for f in futs)
+        eidx = rng.choice(entry.graph.num_edges, churn_edges, replace=False)
+        rem = np.stack([np.asarray(entry.graph.edge_src)[eidx],
+                        entry.graph.indices[eidx]], axis=1)
+        add = rng.integers(0, n, size=(churn_edges, 2))
+        info = s.update_graph("churn", add_edges=add, remove_edges=rem,
+                              reorder="patch")
+        patch_walls.append(info["reorder_seconds"])
+        mutate_walls.append(info["mutate_seconds"])
+
+    # the full-tier cost the patch tier avoids: one measured LOrder pass
+    # over the final mutated graph (the same work `reorder="full"` pays)
+    final = entry.graph
+    t0 = time.perf_counter()
+    lorder(final)
+    lorder_seconds = time.perf_counter() - t0
+
+    ref = EngineSession(redecide_min_queries=10**9)
+    ref.register(final, graph_id="ref", expected_queries=4096)
+    picks = rng.choice(n, size=6, replace=False)
+    bit_identical = all(
+        np.array_equal(np.asarray(s.submit("churn", "bfs", [int(v)])),
+                       np.asarray(ref.submit("ref", "bfs", [int(v)])))
+        for v in picks)
+
+    snap = s.metrics().snapshot()["histograms"]
+    serve = merge_histogram_snapshots(
+        list(snap.get("engine_serve_seconds", {}).values()))
+    patch_median = float(np.median(patch_walls))
+    speedup = lorder_seconds / max(patch_median, 1e-9)
+    tel = s.telemetry()
+    out = {
+        "num_vertices": n,
+        "num_edges_final": final.num_edges,
+        "rounds": rounds,
+        "churn_edges_per_round": churn_edges,
+        "scheme": entry.decision.scheme,
+        "registration_reorder_seconds": round(
+            tel["graphs"]["churn"]["ledger"]["reorder_seconds"], 6),
+        "full_lorder_seconds": round(lorder_seconds, 6),
+        "patch_reorder_seconds_median": round(patch_median, 6),
+        "patch_reorder_seconds_max": round(float(np.max(patch_walls)), 6),
+        "mutate_seconds_median": round(float(np.median(mutate_walls)), 6),
+        "patch_speedup_vs_lorder": round(speedup, 1),
+        "patch_at_least_10x_cheaper": bool(speedup >= 10.0),
+        "serve_p50_ms": round((serve.get("p50") or 0.0) * 1e3, 3),
+        "serve_p99_ms": round((serve.get("p99") or 0.0) * 1e3, 3),
+        "generations": entry.generation,
+        "hot_prefix_len": entry.hot_prefix_len,
+        "probe_drift": round(entry.probe_drift, 4),
+        "mutations": tel["mutations"],
+        "bit_identical": bit_identical,
+    }
+    s.close(drain=False)
+    ref.close(drain=False)
+    print(f"[engine] churn: {rounds} rounds x {churn_edges} edges on "
+          f"{entry.decision.scheme}; patch {patch_median * 1e3:.1f}ms vs "
+          f"LOrder {lorder_seconds:.2f}s ({speedup:.0f}x), serve p99 "
+          f"{out['serve_p99_ms']:.1f}ms, bit-identical={bit_identical}",
+          flush=True)
+    return out
+
+
 PHASES = ("decisions", "redecision", "calibration", "bucketing", "sharded",
-          "hot_prefix", "fused", "scheduler", "observability", "sustained")
+          "hot_prefix", "fused", "scheduler", "observability", "sustained",
+          "churn")
 
 
 def parse_phases(value: str | None) -> list[str]:
@@ -815,6 +921,8 @@ def run(scale: float = 0.5, batch: int = 8, repeats: int = 5,
         out["observability"] = _phase_observability(scale)
     if "sustained" in todo:
         out["sustained"] = _phase_sustained(scale)
+    if "churn" in todo:
+        out["churn"] = _phase_churn(scale)
 
     out["calibration"] = session.policy.calibrator.as_dict()
     out["executor"] = session.executor.telemetry()

@@ -75,7 +75,9 @@ class Graph:
 
     @property
     def average_degree(self) -> float:
-        """The paper's hotness threshold λ = avg degree."""
+        """The paper's hotness threshold λ = avg degree (0.0 when V = 0)."""
+        if self.num_vertices == 0:
+            return 0.0
         return float(self.degree.mean())
 
     def hot_mask(self, threshold: float | None = None) -> np.ndarray:

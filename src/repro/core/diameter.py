@@ -17,6 +17,8 @@ from .traversal import bfs_levels, farthest_vertex
 def estimate_diameter(g: Graph, sweeps: int = 4, seed: int = 0) -> int:
     """Iterated double-sweep BFS diameter lower bound (exact on trees)."""
     und = g.undirected
+    if und.num_vertices == 0:
+        return 0
     rng = np.random.default_rng(seed)
     # start from the highest-degree vertex (lands in the giant component)
     start = int(np.argmax(und.out_degree))
@@ -42,6 +44,8 @@ def two_sweep_diameter(g: Graph) -> int:
     the paper's graph families at a fraction of the probe cost.
     """
     und = g.undirected
+    if und.num_vertices == 0:
+        return 0
     start = int(np.argmax(und.out_degree))
     far, ecc = farthest_vertex(und, start)
     if ecc == 0:

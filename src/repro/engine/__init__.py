@@ -25,8 +25,10 @@ from .obs import (Clock, Counter, Gauge, Histogram, ManualClock,
                   MetricsRegistry, ProfilerHook, RateWindow, Tracer,
                   validate_chrome_trace)
 from .policy import (AdmissionPolicy, PolicyDecision, PolicyRecord,
-                     ReorderPolicy)
-from .registry import GraphProbes, GraphRegistry, probe_graph
+                     ReorderPolicy, decision_changed)
+from .registry import (GraphProbes, GraphRegistry, degree_histogram,
+                       gini_from_histogram, hub_stats_from_histogram,
+                       probe_graph)
 from .result_cache import ResultCache
 from .scheduler import (AdmissionRejected, DeadlineExceeded,
                         MicroBatchScheduler, QueryFuture, Request,
@@ -43,6 +45,7 @@ __all__ = [
     "RateWindow", "ReorderPolicy", "Request", "ResultCache",
     "SHARDED_KERNELS", "SchemeStats", "ShardedBackend",
     "SingleDeviceBackend", "StrengthCalibrator", "Tracer", "bucket_dims",
-    "canonical_component_labels", "estimate_device_bytes", "probe_graph",
-    "validate_chrome_trace",
+    "canonical_component_labels", "decision_changed", "degree_histogram",
+    "estimate_device_bytes", "gini_from_histogram",
+    "hub_stats_from_histogram", "probe_graph", "validate_chrome_trace",
 ]

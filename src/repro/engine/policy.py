@@ -52,6 +52,21 @@ class PolicyDecision:
     hot_prefix_fraction: float | None = None
 
 
+def decision_changed(old: PolicyDecision | None,
+                     new: PolicyDecision | None) -> bool:
+    """Whether a fresh decision is materially different from the applied
+    one — i.e. whether a mutation warrants an async full reorder. Reasons
+    and predicted gains differ on every re-decide; what matters is the
+    layout recipe: scheme, its kwargs, placement, and exchange fraction.
+    """
+    if old is None or new is None:
+        return old is not new
+    return (old.scheme != new.scheme
+            or old.kwargs != new.kwargs
+            or old.backend != new.backend
+            or old.hot_prefix_fraction != new.hot_prefix_fraction)
+
+
 @dataclasses.dataclass(frozen=True)
 class AdmissionPolicy:
     """Backpressure contract for the request plane (scheduler.py).

@@ -23,6 +23,7 @@ import numpy as np
 
 from ..core.csr import Graph
 from ..core.diameter import two_sweep_diameter
+from ..core.mutate import MutationDelta
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +49,50 @@ def degree_gini(degrees: np.ndarray) -> float:
         return 0.0
     ranks = np.arange(1, n + 1, dtype=np.float64)
     return float(2.0 * (ranks * d).sum() / (n * total) - (n + 1) / n)
+
+
+def degree_histogram(degrees: np.ndarray) -> np.ndarray:
+    """Degree histogram — the O(max_degree) basis of incremental probes."""
+    if len(degrees) == 0:
+        return np.zeros(1, dtype=np.int64)
+    return np.bincount(degrees.astype(np.int64))
+
+
+def gini_from_histogram(hist: np.ndarray) -> float:
+    """Degree Gini from a degree histogram, O(max_degree).
+
+    Equals ``degree_gini(degrees)`` exactly: with degrees sorted
+    ascending, a degree value d occupying ranks r0+1..r0+c contributes
+    d · (c·r0 + c(c+1)/2) to Σ rank·degree.
+    """
+    hist = np.asarray(hist, dtype=np.float64)
+    counts = hist
+    values = np.arange(len(hist), dtype=np.float64)
+    n = counts.sum()
+    total = (values * counts).sum()
+    if n == 0 or total == 0:
+        return 0.0
+    r0 = np.concatenate([[0.0], np.cumsum(counts)[:-1]])
+    rank_sum = (values * (counts * r0 + counts * (counts + 1) / 2.0)).sum()
+    return float(2.0 * rank_sum / (n * total) - (n + 1) / n)
+
+
+def hub_stats_from_histogram(hist: np.ndarray) -> tuple[float, float, float]:
+    """(avg_degree, hub_fraction, hub_mass) from a degree histogram.
+
+    Hot := degree > λ (= avg degree), matching ``Graph.hot_mask``.
+    """
+    hist = np.asarray(hist, dtype=np.float64)
+    values = np.arange(len(hist), dtype=np.float64)
+    n = hist.sum()
+    total = (values * hist).sum()
+    if n == 0:
+        return 0.0, 0.0, 0.0
+    lam = total / n
+    hot = values > lam
+    hub_fraction = float(hist[hot].sum() / n)
+    hub_mass = float((values[hot] * hist[hot]).sum() / total) if total else 0.0
+    return float(lam), hub_fraction, hub_mass
 
 
 def probe_graph(g: Graph) -> GraphProbes:
@@ -94,11 +139,19 @@ class GraphEntry:
     ledger: object | None = None      # engine.session.AmortizationLedger
     queries_observed: int = 0         # realized volume, survives re-decisions
     redecisions: int = 0
-    # layout generation: bumped every time a policy decision is (re-)applied.
-    # The scheduler translates each request through the generation current
-    # at launch time and stamps it into the request's telemetry, so layout
-    # replacements are observable and never straddle an in-flight future.
+    # layout generation: bumped every time a policy decision is (re-)applied
+    # or the graph mutates. The scheduler translates each request through
+    # the generation current at launch time and stamps it into the
+    # request's telemetry, so layout replacements are observable and never
+    # straddle an in-flight future.
     generation: int = 0
+    # --- dynamic-graph state (core/mutate.py deltas) -------------------
+    mutations: int = 0                # applied deltas; doubles as the token
+    #                                   fencing stale async full reorders
+    degree_hist: np.ndarray | None = None  # basis of incremental probes
+    # accumulated |delta| / E since the last full probe_graph; past the
+    # session's drift threshold the next mutation pays a full re-probe
+    probe_drift: float = 0.0
 
 
 class GraphRegistry:
@@ -109,12 +162,69 @@ class GraphRegistry:
 
     def add(self, graph: Graph, graph_id: str | None = None,
             expected_queries: int = 64) -> GraphEntry:
-        gid = graph_id or graph.name
+        if graph_id is not None and not graph_id:
+            # an explicit empty id must not silently alias to graph.name
+            raise ValueError("graph_id must be a non-empty string")
+        gid = graph_id if graph_id is not None else graph.name
+        if not gid:
+            raise ValueError(
+                "graph has an empty name; pass an explicit graph_id")
         if gid in self._entries:
             raise KeyError(f"graph id {gid!r} already registered")
         entry = GraphEntry(gid, graph, probe_graph(graph), expected_queries)
+        entry.degree_hist = degree_histogram(graph.degree)
         self._entries[gid] = entry
         return entry
+
+    def apply_mutation(self, graph_id: str, new_graph: Graph,
+                       delta: MutationDelta,
+                       drift_threshold: float = 0.5) -> str:
+        """Swap in the mutated graph and refresh probes; returns the probe
+        mode used, ``"incremental"`` or ``"full"``.
+
+        Incremental mode updates the degree histogram from the delta's
+        per-vertex degree changes (O(|delta| + max_degree)) and
+        recomputes Gini/hub stats from it — exact, since both are pure
+        functions of the degree multiset. The diameter probe is *not* a
+        function of degrees, so it goes stale under incremental mode;
+        accumulated drift (Σ |delta| / E) past ``drift_threshold``
+        forces a full ``probe_graph`` (fresh diameter) and resets drift.
+        """
+        entry = self._entries[graph_id]
+        old_degrees = entry.graph.degree  # cached; pre-mutation values
+        t0 = time.perf_counter()
+        entry.graph = new_graph
+        entry.mutations += 1
+        entry.probe_drift += delta.edges_changed / max(entry.probes.num_edges, 1)
+        if entry.degree_hist is None or entry.probe_drift > drift_threshold:
+            entry.probes = probe_graph(new_graph)
+            entry.degree_hist = degree_histogram(new_graph.degree)
+            entry.probe_drift = 0.0
+            return "full"
+
+        hist = entry.degree_hist
+        changed = delta.changed_vertices
+        old_d = old_degrees[changed].astype(np.int64)
+        new_d = old_d + delta.degree_delta
+        max_d = int(new_d.max()) if len(new_d) else 0
+        if max_d >= len(hist):
+            hist = np.concatenate(
+                [hist, np.zeros(max_d - len(hist) + 1, dtype=hist.dtype)])
+        np.subtract.at(hist, old_d, 1)
+        np.add.at(hist, new_d, 1)
+        entry.degree_hist = hist
+        lam, hub_fraction, hub_mass = hub_stats_from_histogram(hist)
+        entry.probes = dataclasses.replace(
+            entry.probes,
+            num_edges=new_graph.num_edges,
+            avg_degree=lam,
+            degree_gini=gini_from_histogram(hist),
+            hub_fraction=hub_fraction,
+            hub_mass=hub_mass,
+            # diameter: stale until the next full re-probe (drift-gated)
+            probe_seconds=time.perf_counter() - t0,
+        )
+        return "incremental"
 
     def get(self, graph_id: str) -> GraphEntry:
         return self._entries[graph_id]

@@ -122,7 +122,11 @@ class ResultCache:
         """Insert one result row; ``pinned`` keeps it off the LRU clock."""
         k = self.key(graph_id, generation, kernel, source)
         with self._lock:
-            if pinned and len(self._pinned) < self.max_pinned:
+            # an already-pinned key refreshes in place even at max_pinned —
+            # otherwise the write is silently dropped and the stale row
+            # stays pinned forever
+            if pinned and (k in self._pinned
+                           or len(self._pinned) < self.max_pinned):
                 self._lru.pop(k, None)
                 self._pinned[k] = row
             elif k not in self._pinned:

@@ -80,6 +80,7 @@ docs/scheduler.md documents the lifecycle and the migration path.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import threading
@@ -527,7 +528,9 @@ class MicroBatchScheduler:
         launches round-robined across streams; each graph gets exactly
         one re-decision check *after* all of its pending requests were
         served — the flush boundary — so no in-flight future straddles a
-        layout replacement.
+        layout replacement. Graphs holding a completed async full-reorder
+        (`EngineSession.update_graph`) join the flush set even with no
+        pending requests, so the flush boundary can swap their layout in.
         """
         with self._lock:
             graphs: list[str] = []
@@ -535,15 +538,33 @@ class MicroBatchScheduler:
                 if reqs and (graph_id is None or gid == graph_id):
                     if gid not in graphs:
                         graphs.append(gid)
+            for gid in self.session._swap_pending_ids():
+                if (graph_id is None or gid == graph_id) and gid not in graphs:
+                    graphs.append(gid)
             return self._flush_graphs(graphs)
 
     def drain(self) -> int:
-        """Flush until no request is pending anywhere (lifecycle close)."""
+        """Flush until no request is pending anywhere (lifecycle close).
+        A final flush applies any still-pending layout swaps."""
         served = 0
         with self._lock:
             while self.pending():
                 served += self.flush()
+            if self.session._swap_pending_ids():
+                served += self.flush()
         return served
+
+    @contextlib.contextmanager
+    def fence(self, graph_id: str):
+        """Mutation fence: serve every in-flight request of ``graph_id``
+        under its current (pre-mutation) generation, then hold the
+        plane's lock while the caller mutates — enqueues from other
+        threads block until the mutation completes, so no future ever
+        straddles a mutation. Re-entrant (the lock is an RLock), so a
+        fenced mutation may itself flush or apply decisions."""
+        with self._lock:
+            self.flush(graph_id)
+            yield
 
     def _expire(self, req: Request) -> None:
         """Fail one still-pending request with `DeadlineExceeded` (called
@@ -637,8 +658,12 @@ class MicroBatchScheduler:
             self._c_served.inc(served)
         # flush boundary: all pending requests for these graphs are
         # answered and translated under the generation that served them —
-        # only now may layouts be replaced (skipped if the flush aborted)
+        # only now may layouts be replaced (skipped if the flush aborted).
+        # A completed async full-reorder swaps in here; a graph whose
+        # layout just swapped skips the re-decision check this boundary
         for gid in graphs:
+            if session._apply_pending_swap(entries[gid]):
+                continue
             session._maybe_redecide(entries[gid])
         return served
 

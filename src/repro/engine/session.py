@@ -40,14 +40,18 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 
 import numpy as np
 
 from ..cache.sim import estimate_miss_rate, scaled_config
 from ..core.csr import Graph
+from ..core.mutate import apply_edge_delta
+from ..core.patch_reorder import patch_permutation
 from .executor import MULTI_SOURCE, BatchedExecutor
 from .obs import Clock, MetricsRegistry, ProfilerHook, Tracer
-from .policy import AdmissionPolicy, PolicyDecision, ReorderPolicy
+from .policy import (AdmissionPolicy, PolicyDecision, ReorderPolicy,
+                     decision_changed)
 from .registry import GraphEntry, GraphRegistry
 from .result_cache import ResultCache
 from .scheduler import (LABEL_KERNELS, MicroBatchScheduler, QueryFuture,
@@ -124,6 +128,22 @@ class AmortizationLedger:
                 "break_even_never": never}
 
 
+@dataclasses.dataclass(frozen=True)
+class _PendingSwap:
+    """A completed async full reorder waiting for a flush boundary.
+
+    ``token`` is the entry's mutation count when the reorder was
+    scheduled: if the graph mutated again while LOrder ran, the perm
+    describes a graph that no longer exists and the swap is discarded.
+    """
+
+    decision: PolicyDecision
+    perm: np.ndarray
+    reorder_seconds: float
+    token: int
+    trigger: str
+
+
 class EngineSession:
     """enqueue(...) -> QueryFuture / submit(...) -> results (original ids)."""
 
@@ -146,7 +166,9 @@ class EngineSession:
                  clock: Clock | None = None,
                  tracer: Tracer | None = None,
                  profiler_dir: str | None = None,
-                 fused: bool = True):
+                 fused: bool = True,
+                 probe_drift_threshold: float = 0.5,
+                 async_full_reorder: bool = True):
         # an explicitly supplied policy carries its own budget; the
         # session-level knob only configures the default policy
         self.policy = policy or ReorderPolicy(
@@ -177,6 +199,25 @@ class EngineSession:
                                      "registration)")
         self._c_redecisions = m.counter("engine_redecisions_total",
                                         "re-decisions that replaced a layout")
+        # dynamic-graph plane (update_graph): counters + async-swap state
+        self.probe_drift_threshold = probe_drift_threshold
+        self.async_full_reorder = async_full_reorder
+        self._pending_swaps: dict[str, _PendingSwap] = {}
+        self._reorder_threads: list[threading.Thread] = []
+        self._c_mutations = m.counter("engine_mutations_total",
+                                      "edge deltas applied via update_graph")
+        self._c_edges_added = m.counter("engine_edges_added_total",
+                                        "edges added across all mutations")
+        self._c_edges_removed = m.counter("engine_edges_removed_total",
+                                          "edges removed across all mutations")
+        self._c_patches = m.counter("engine_patch_reorders_total",
+                                    "incremental hot-prefix patches applied")
+        self._c_swaps = m.counter("engine_layout_swaps_total",
+                                  "async full reorders swapped in at a "
+                                  "flush boundary")
+        self._c_swaps_discarded = m.counter(
+            "engine_layout_swaps_discarded_total",
+            "async full reorders invalidated by a newer mutation")
         # cross-request result cache (result_cache.py): True builds one in
         # the session's metrics namespace, False disables it, or pass a
         # pre-configured ResultCache (its own metrics registry is kept)
@@ -207,9 +248,14 @@ class EngineSession:
 
     # ----------------------------------------------------------- lifecycle
     def close(self, drain: bool = True) -> None:
-        """Stop the background auto-flush thread (if any) and, by default,
-        drain every pending request so no future is left dangling."""
+        """Stop the background auto-flush thread (if any), wait for any
+        in-flight async full reorders, and, by default, drain every
+        pending request so no future is left dangling (the drain's final
+        flush also applies any completed layout swap)."""
         self.scheduler.stop_auto_flush()
+        for t in self._reorder_threads:
+            t.join(timeout=120.0)
+        self._reorder_threads.clear()
         if drain:
             self.scheduler.drain()
 
@@ -232,11 +278,14 @@ class EngineSession:
         self._c_registered.inc()
         return entry.graph_id
 
-    def _apply_decision(self, entry: GraphEntry,
-                        decision: PolicyDecision) -> None:
+    def _apply_decision(self, entry: GraphEntry, decision: PolicyDecision,
+                        perm: np.ndarray | None = None,
+                        reorder_seconds: float | None = None) -> None:
         """Reorder ``entry.graph`` per ``decision`` and (re)build serving
         state: permutations, served layout, device arrays, policy record,
-        fresh ledger. Used at registration and again on re-decision.
+        fresh ledger. Used at registration, on re-decision, and (with a
+        ``perm`` precomputed off the request path) when an async full
+        reorder swaps in at a flush boundary.
 
         Bumps the entry's layout ``generation``: the scheduler stamps
         every served request with the generation whose perm translated
@@ -249,12 +298,20 @@ class EngineSession:
             # the generation key already makes the old layout's rows
             # unreachable; this reclaims exactly the stale graph's memory
             self.result_cache.invalidate_graph(entry.graph_id)
-        t0 = self.clock.now()
-        with self.tracer.span("reorder", graph_id=entry.graph_id,
-                              scheme=decision.scheme,
-                              generation=entry.generation):
-            perm = np.asarray(self.policy.reorder_fn(decision)(entry.graph))
-        entry.reorder_seconds = self.clock.now() - t0
+        if perm is None:
+            t0 = self.clock.now()
+            with self.tracer.span("reorder", graph_id=entry.graph_id,
+                                  scheme=decision.scheme,
+                                  generation=entry.generation):
+                perm = np.asarray(
+                    self.policy.reorder_fn(decision)(entry.graph))
+            entry.reorder_seconds = self.clock.now() - t0
+        else:
+            perm = np.asarray(perm)
+            # the reorder wall was paid off the request path; book it so
+            # the ledger still amortizes against the true cost
+            entry.reorder_seconds = (reorder_seconds
+                                     if reorder_seconds is not None else 0.0)
         self._c_reorders.inc()
         self.metrics_registry.histogram(
             "engine_reorder_seconds", "wall cost of applying one decision",
@@ -319,6 +376,206 @@ class EngineSession:
         k = max(self.executor.sharded.cold_every, 1)
         exchange_ratio = min(f + (1.0 - f) / k, 1.0)
         return round(1.0 - (1.0 - base) * exchange_ratio, 4)
+
+    # ------------------------------------------------------ dynamic graphs
+    def update_graph(self, graph_id: str, add_edges=None, remove_edges=None,
+                     *, reorder: str = "auto") -> dict:
+        """Apply an edge delta to a registered graph (the mutation API).
+
+        Edges are ``(k, 2)`` original-id pairs; removal is multiset
+        (each pair removes one occurrence, missing edges raise). The
+        mutation runs under a scheduler **fence**: every in-flight
+        request for this graph is served under its pre-mutation
+        generation first, then the plane's lock is held while the CSR is
+        rebuilt (`core.mutate`), probes refresh incrementally or fully
+        past the drift threshold (`registry.apply_mutation`), the layout
+        is **patched** — a stable O(V) hot-prefix repack
+        (`core.patch_reorder`) instead of a full reorder — and the
+        mutated CSR is re-uploaded/re-bucketed through the backend under
+        a bumped generation (every result-cache row invalidated).
+
+        ``reorder`` picks the tier:
+
+        - ``"patch"`` — incremental patch only (the request-path cost).
+        - ``"auto"`` (default) — patch now; if the refreshed probes flip
+          the policy decision (`policy.decision_changed`), additionally
+          run the full reorder *asynchronously* off the request path and
+          swap it in at a later flush boundary.
+        - ``"async"`` — patch now, always schedule the async full reorder.
+        - ``"full"`` — synchronous full reorder (blocks for LOrder).
+
+        Returns a summary dict (tier, probe mode, generation, walls).
+        """
+        if reorder not in ("auto", "patch", "async", "full"):
+            raise ValueError(f"unknown reorder tier {reorder!r}")
+        entry = self.registry.get(graph_id)  # KeyError on unknown id
+        t0 = self.clock.now()
+        with self.scheduler.fence(graph_id):
+            with self.tracer.span("mutate", graph_id=graph_id,
+                                  tier=reorder):
+                new_graph, delta = apply_edge_delta(
+                    entry.graph, add_edges, remove_edges)
+                if delta.edges_changed == 0:
+                    return {"graph_id": graph_id, "added": 0, "removed": 0,
+                            "tier": "noop", "probe_mode": "none",
+                            "generation": entry.generation,
+                            "full_reorder_scheduled": False,
+                            "mutate_seconds": 0.0}
+                # a full reorder computed against the pre-mutation graph
+                # describes a layout for a graph that no longer exists
+                if self._pending_swaps.pop(graph_id, None) is not None:
+                    self._c_swaps_discarded.inc()
+                probe_mode = self.registry.apply_mutation(
+                    graph_id, new_graph, delta,
+                    drift_threshold=self.probe_drift_threshold)
+                self._c_mutations.inc()
+                self._c_edges_added.inc(delta.added)
+                self._c_edges_removed.inc(delta.removed)
+                schedule_full, trigger, fresh = False, None, None
+                if reorder == "full":
+                    tier = "full"
+                    volume = max(entry.queries_observed,
+                                 entry.expected_queries)
+                    self._apply_decision(
+                        entry, self.policy.decide(entry.probes, volume))
+                else:
+                    tier = "patch"
+                    self._apply_patch(entry)
+                    if reorder == "async":
+                        schedule_full, trigger = True, "requested"
+                    elif reorder == "auto":
+                        volume = max(entry.queries_observed,
+                                     entry.expected_queries)
+                        fresh = self.policy.decide(entry.probes, volume)
+                        if decision_changed(entry.decision, fresh):
+                            schedule_full = True
+                            trigger = "decision-changed"
+                if schedule_full:
+                    self._schedule_full_reorder(entry, trigger,
+                                                decision=fresh)
+            wall = self.clock.now() - t0
+            self.metrics_registry.histogram(
+                "engine_mutate_seconds",
+                "wall cost of one update_graph call (fence to return)",
+                tier=tier).observe(wall)
+        return {"graph_id": graph_id,
+                "added": delta.added, "removed": delta.removed,
+                "tier": tier, "probe_mode": probe_mode,
+                "generation": entry.generation,
+                "full_reorder_scheduled": schedule_full,
+                "reorder_seconds": entry.reorder_seconds,
+                "mutate_seconds": wall}
+
+    def _apply_patch(self, entry: GraphEntry) -> None:
+        """Incremental patch tier: stable hot-prefix repack + re-upload.
+
+        Keeps the current decision; bumps the generation (invalidating
+        every cached row); re-packs the newly-hot vertices into the hot
+        prefix with one stable O(V) pass — no graph traversal, no cache
+        simulation — and re-uploads/re-buckets the mutated CSR through
+        the entry's backend. Identity/random layouts have no hot prefix
+        to maintain, so they keep their permutation and only re-upload.
+        """
+        decision = entry.decision
+        entry.generation += 1
+        if self.result_cache is not None:
+            self.result_cache.invalidate_graph(entry.graph_id)
+        # reorder_seconds keeps `_apply_decision`'s semantics — the cost
+        # of *computing the permutation* (here the stable O(V) repack, vs
+        # the full tier's LOrder pass); the served rebuild and re-upload
+        # are paid by both tiers and land in engine_mutate_seconds
+        t0 = self.clock.now()
+        with self.tracer.span("patch_reorder", graph_id=entry.graph_id,
+                              scheme=decision.scheme,
+                              generation=entry.generation):
+            if entry.hot_prefix_len > 0:
+                perm, inv, hot_len, _info = patch_permutation(
+                    entry.graph, entry.perm, entry.hot_prefix_len)
+                entry.perm, entry.inv_perm = perm, inv
+                entry.hot_prefix_len = hot_len
+        entry.reorder_seconds = self.clock.now() - t0
+        if decision.scheme == "original":
+            entry.served = entry.graph
+        else:
+            entry.served = entry.graph.apply_permutation(entry.perm)
+        with self.tracer.span("prepare", graph_id=entry.graph_id,
+                              backend=decision.backend):
+            entry.handle = self.executor.prepare(
+                entry.served, backend=decision.backend,
+                canonical_ids=entry.inv_perm,
+                hot_prefix_fraction=decision.hot_prefix_fraction)
+        entry.bucket_shape = entry.handle.bucket
+        entry.arrays = entry.handle.arrays
+        self._c_patches.inc()
+        self.metrics_registry.histogram(
+            "engine_reorder_seconds", "wall cost of applying one decision",
+            scheme="patch").observe(entry.reorder_seconds)
+        # the stable repack preserves the locality structure the full
+        # reorder built, so the realized gain carries forward — now
+        # amortizing against the patch's (tiny) cost, with no
+        # graph-sized cache simulation on the mutation path
+        prev = entry.ledger
+        entry.ledger = AmortizationLedger(
+            entry.reorder_seconds,
+            prev.realized_gain if prev else 0.0,
+            backend=decision.backend,
+            gain_discount=prev.gain_discount if prev else 1.0)
+
+    def _schedule_full_reorder(self, entry: GraphEntry, trigger: str,
+                               decision: PolicyDecision | None = None) -> None:
+        """Run the full reorder off the request path; the result becomes a
+        `_PendingSwap` applied at the next flush boundary — unless the
+        graph mutates again first (the token check discards it)."""
+        token = entry.mutations
+        graph = entry.graph          # immutable snapshot: mutations replace
+        gid = entry.graph_id         # entry.graph, never modify it in place
+        if decision is None:
+            volume = max(entry.queries_observed, entry.expected_queries)
+            decision = self.policy.decide(entry.probes, volume)
+
+        def _work():
+            t0 = self.clock.now()
+            with self.tracer.span("reorder", graph_id=gid,
+                                  scheme=decision.scheme, background=True):
+                perm = np.asarray(self.policy.reorder_fn(decision)(graph))
+            secs = self.clock.now() - t0
+            with self.scheduler._lock:
+                if entry.mutations != token:
+                    self._c_swaps_discarded.inc()
+                    return
+                self._pending_swaps[gid] = _PendingSwap(
+                    decision, perm, secs, token, trigger)
+
+        if self.async_full_reorder:
+            t = threading.Thread(target=_work, daemon=True,
+                                 name=f"engine-reorder-{gid}")
+            self._reorder_threads.append(t)
+            t.start()
+        else:
+            # inline mode for deterministic tests/benchmarks: the swap
+            # still waits for a flush boundary, only the reorder blocks
+            _work()
+
+    def _swap_pending_ids(self) -> list[str]:
+        """Graphs holding a completed full reorder awaiting a flush."""
+        return list(self._pending_swaps)
+
+    def _apply_pending_swap(self, entry: GraphEntry) -> bool:
+        """Flush-boundary hook (scheduler): swap in a completed async full
+        reorder, or discard it if a newer mutation invalidated it."""
+        swap = self._pending_swaps.pop(entry.graph_id, None)
+        if swap is None:
+            return False
+        if swap.token != entry.mutations:
+            self._c_swaps_discarded.inc()
+            return False
+        with self.tracer.span("swap_layout", graph_id=entry.graph_id,
+                              scheme=swap.decision.scheme,
+                              trigger=swap.trigger):
+            self._apply_decision(entry, swap.decision, perm=swap.perm,
+                                 reorder_seconds=swap.reorder_seconds)
+        self._c_swaps.inc()
+        return True
 
     # -------------------------------------------------------- re-decision
     def _maybe_redecide(self, entry: GraphEntry) -> dict | None:
@@ -495,6 +752,15 @@ class EngineSession:
             "policy": [r.as_dict() for r in self.policy.history],
             "calibration": self.policy.calibrator.as_dict(),
             "redecisions": list(self.redecision_log),
+            "mutations": {
+                "mutations": self._c_mutations.value,
+                "edges_added": self._c_edges_added.value,
+                "edges_removed": self._c_edges_removed.value,
+                "patch_reorders": self._c_patches.value,
+                "layout_swaps": self._c_swaps.value,
+                "layout_swaps_discarded": self._c_swaps_discarded.value,
+                "pending_swaps": self._swap_pending_ids(),
+            },
             "graphs": {
                 gid: {
                     "scheme": e.decision.scheme if e.decision else None,
@@ -509,6 +775,9 @@ class EngineSession:
                     "expected_queries": e.expected_queries,
                     "queries_observed": e.queries_observed,
                     "redecisions": e.redecisions,
+                    "mutations": e.mutations,
+                    "probe_drift": round(e.probe_drift, 6),
+                    "hot_prefix_len": e.hot_prefix_len,
                     "ledger": e.ledger.as_dict() if e.ledger else None,
                 }
                 for gid, e in ((g, self.registry.get(g))

@@ -1,0 +1,584 @@
+"""Dynamic graphs: update_graph deltas, patch reordering, async swaps.
+
+The contract under test is the mutation tentpole: any sequence of edge
+deltas applied through ``EngineSession.update_graph`` must leave the
+session serving results bit-identical (allclose for the float kernels
+pr/bc, same convention as test_scheduler.py) to a fresh session
+registered with the final graph — across {exact, bucketed, sharded}
+backends and both reorder tiers. The hypothesis property test generates
+those sequences; regression tests cover the lifecycle bugfixes that
+rode along (empty/edgeless probes, pinned-refresh drops, empty graph
+ids), and the 4-forced-device leg re-runs the module on a genuine mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from conftest import run_forced_four_devices
+from repro.core.csr import from_edges
+from repro.core.diameter import estimate_diameter, two_sweep_diameter
+from repro.core.generators import powerlaw_community
+from repro.core.mutate import apply_edge_delta
+from repro.core.patch_reorder import patch_permutation
+from repro.engine import (BatchedExecutor, EngineSession, GraphRegistry,
+                          PolicyDecision, ResultCache, decision_changed,
+                          degree_histogram, gini_from_histogram,
+                          hub_stats_from_histogram, probe_graph)
+from repro.engine.registry import degree_gini
+from repro.engine.session import _PendingSwap
+
+FLOAT_KERNELS = ("pr", "bc")
+KERNELS = ("bfs", "sssp", "bc", "pr", "cc", "ccsv")
+
+
+def _session(**kw) -> EngineSession:
+    kw.setdefault("redecide_min_queries", 10**6)
+    kw.setdefault("async_full_reorder", False)  # deterministic by default
+    return EngineSession(**kw)
+
+
+def _make(config: str) -> EngineSession:
+    if config == "exact":
+        return _session(executor=BatchedExecutor(bucketing=False))
+    if config == "sharded":
+        return _session(device_budget_bytes=1024)
+    assert config == "bucketed"
+    return _session()
+
+
+def _assert_matches(kernel: str, got, want) -> None:
+    got, want = np.asarray(got), np.asarray(want)
+    if kernel in FLOAT_KERNELS:
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+def _edge_pairs(g) -> np.ndarray:
+    """The graph's edge multiset as a (E, 2) original-id pair array."""
+    return np.stack([np.asarray(g.edge_src, dtype=np.int64),
+                     np.asarray(g.indices, dtype=np.int64)], axis=1)
+
+
+def _random_delta(g, rng, n_add: int, n_remove: int):
+    pairs = _edge_pairs(g)
+    n_remove = min(n_remove, g.num_edges)
+    remove = None
+    if n_remove:
+        idx = rng.choice(g.num_edges, size=n_remove, replace=False)
+        remove = pairs[idx]
+    add = None
+    if n_add:
+        add = rng.integers(0, g.num_vertices, size=(n_add, 2))
+    return add, remove
+
+
+# ------------------------------------------------------- core.mutate deltas
+def test_apply_edge_delta_matches_fresh_rebuild():
+    rng = np.random.default_rng(0)
+    n, m = 60, 240
+    src, dst = rng.integers(0, n, m), rng.integers(0, n, m)
+    g = from_edges(n, src, dst, name="g")
+    pairs = _edge_pairs(g)
+    rem_idx = rng.choice(m, size=50, replace=False)
+    add = rng.integers(0, n, size=(70, 2))
+    new_g, delta = apply_edge_delta(g, add_edges=add,
+                                    remove_edges=pairs[rem_idx])
+    keep = np.ones(m, dtype=bool)
+    keep[rem_idx] = False
+    want = from_edges(n, np.concatenate([pairs[keep, 0], add[:, 0]]),
+                      np.concatenate([pairs[keep, 1], add[:, 1]]), name="g")
+    np.testing.assert_array_equal(new_g.indptr, want.indptr)
+    np.testing.assert_array_equal(new_g.indices, want.indices)
+    assert delta.added == 70 and delta.removed == 50
+    assert delta.edges_changed == 120
+    assert new_g.name == g.name
+
+
+def test_apply_edge_delta_degree_accounting():
+    rng = np.random.default_rng(1)
+    n, m = 40, 160
+    g = from_edges(n, rng.integers(0, n, m), rng.integers(0, n, m), name="g")
+    add, remove = _random_delta(g, rng, 30, 25)
+    new_g, delta = apply_edge_delta(g, add_edges=add, remove_edges=remove)
+    # changed_vertices is a sorted id set; dense degree deltas match the
+    # actual degree difference, and every listed vertex actually changed
+    cv = delta.changed_vertices
+    assert np.all(np.diff(cv) > 0)
+    assert np.all(delta.degree_delta != 0)
+    np.testing.assert_array_equal(
+        delta.degree_delta, delta.out_degree_delta + delta.in_degree_delta)
+    dense = np.zeros(n, dtype=np.int64)
+    dense[cv] = delta.degree_delta
+    np.testing.assert_array_equal(
+        new_g.degree.astype(np.int64) - g.degree.astype(np.int64), dense)
+    # per-direction deltas hold at the listed vertices (a vertex whose
+    # out/in changes cancel has total 0 and is rightly absent)
+    np.testing.assert_array_equal(
+        delta.out_degree_delta,
+        new_g.out_degree[cv].astype(np.int64)
+        - g.out_degree[cv].astype(np.int64))
+    np.testing.assert_array_equal(
+        delta.in_degree_delta,
+        new_g.in_degree[cv].astype(np.int64)
+        - g.in_degree[cv].astype(np.int64))
+
+
+def test_apply_edge_delta_transplants_degree_caches():
+    rng = np.random.default_rng(2)
+    n = 30
+    g = from_edges(n, rng.integers(0, n, 90), rng.integers(0, n, 90),
+                   name="g")
+    add, remove = _random_delta(g, rng, 12, 10)
+    new_g, _ = apply_edge_delta(g, add_edges=add, remove_edges=remove)
+    # the O(V + delta) transplant pre-populates the cached_property slots
+    for attr in ("out_degree", "in_degree", "degree"):
+        assert attr in new_g.__dict__, f"{attr} cache not transplanted"
+    scratch = from_edges(n, new_g.edge_src, new_g.indices, name="g")
+    np.testing.assert_array_equal(new_g.out_degree, scratch.out_degree)
+    np.testing.assert_array_equal(new_g.in_degree, scratch.in_degree)
+    np.testing.assert_array_equal(new_g.degree, scratch.degree)
+    assert new_g.out_degree.dtype == scratch.out_degree.dtype
+
+
+def test_apply_edge_delta_multiset_removal():
+    g = from_edges(3, [0, 0, 1], [1, 1, 2], name="m")  # 0->1 twice
+    one, d1 = apply_edge_delta(g, remove_edges=[[0, 1]])
+    assert one.num_edges == 2 and d1.removed == 1
+    np.testing.assert_array_equal(one.indices[one.indptr[0]:one.indptr[1]],
+                                  [1])  # one copy survives
+    both, d2 = apply_edge_delta(g, remove_edges=[[0, 1], [0, 1]])
+    assert both.num_edges == 1 and d2.removed == 2
+    with pytest.raises(ValueError, match="does not hold"):
+        apply_edge_delta(g, remove_edges=[[0, 1]] * 3)
+
+
+def test_apply_edge_delta_validation():
+    g = from_edges(4, [0, 1], [1, 2], name="v")
+    with pytest.raises(ValueError):
+        apply_edge_delta(g, remove_edges=[[2, 3]])        # absent edge
+    with pytest.raises(ValueError, match="endpoints"):
+        apply_edge_delta(g, add_edges=[[0, 4]])           # out of range
+    with pytest.raises(ValueError, match="endpoints"):
+        apply_edge_delta(g, add_edges=[[-1, 0]])
+    with pytest.raises(ValueError, match=r"\(k, 2\)"):
+        apply_edge_delta(g, add_edges=[[0, 1, 2]])        # bad shape
+
+
+def test_apply_edge_delta_empty_is_identity():
+    g = from_edges(4, [0, 1], [1, 2], name="v")
+    same, delta = apply_edge_delta(g)
+    assert same is g and delta.edges_changed == 0
+    same, _ = apply_edge_delta(g, add_edges=np.empty((0, 2), dtype=np.int64))
+    assert same is g
+
+
+# -------------------------------------------------- core.patch_reorder tier
+def test_patch_permutation_packs_hot_prefix_stably():
+    rng = np.random.default_rng(3)
+    n = 80
+    g = from_edges(n, rng.integers(0, n, 400), rng.integers(0, n, 400),
+                   name="p")
+    perm = rng.permutation(n)
+    hot = np.asarray(g.hot_mask(), dtype=bool)
+    new_perm, new_inv, hot_len, info = patch_permutation(g, perm, 0)
+    assert hot_len == int(hot.sum()) == info.hot_prefix_len
+    # a valid bijection whose inverse matches
+    np.testing.assert_array_equal(np.sort(new_perm), np.arange(n))
+    np.testing.assert_array_equal(new_perm[new_inv], np.arange(n))
+    # hot vertices fill exactly [0, hot_len)
+    assert set(new_perm[hot].tolist()) == set(range(hot_len))
+    # stability: relative served order preserved within each group
+    for group in (hot, ~hot):
+        ids = np.flatnonzero(group)
+        np.testing.assert_array_equal(np.argsort(new_perm[ids]),
+                                      np.argsort(perm[ids]))
+
+
+def test_patch_permutation_identity_short_circuit():
+    rng = np.random.default_rng(4)
+    n = 50
+    g = from_edges(n, rng.integers(0, n, 250), rng.integers(0, n, 250),
+                   name="p")
+    hot = np.asarray(g.hot_mask(), dtype=bool)
+    # build a perm that already packs the hot set at the front
+    order = np.concatenate([np.flatnonzero(hot), np.flatnonzero(~hot)])
+    perm = np.empty(n, dtype=np.int64)
+    perm[order] = np.arange(n)
+    new_perm, _, hot_len, info = patch_permutation(g, perm, hot_len := int(
+        hot.sum()))
+    assert info.identity and info.moved == 0
+    np.testing.assert_array_equal(new_perm, perm)
+
+
+def test_patch_permutation_edge_cases():
+    empty = from_edges(0, [], [], name="e")
+    perm, inv, hot_len, info = patch_permutation(
+        empty, np.empty(0, dtype=np.int64), 0)
+    assert hot_len == 0 and info.identity and perm.size == inv.size == 0
+    g = from_edges(3, [0], [1], name="s")
+    with pytest.raises(ValueError, match="shape"):
+        patch_permutation(g, np.arange(2), 0)
+
+
+# ----------------------------------------- satellite: probe totality fixes
+def test_probes_total_on_empty_and_edgeless_graphs():
+    empty = from_edges(0, [], [], name="empty")
+    assert two_sweep_diameter(empty) == 0
+    assert estimate_diameter(empty) == 0
+    assert empty.average_degree == 0.0
+    p = probe_graph(empty)
+    assert p.num_vertices == 0 and p.num_edges == 0
+    assert p.avg_degree == 0.0 and p.hub_mass == 0.0
+
+    edgeless = from_edges(5, [], [], name="edgeless")
+    assert two_sweep_diameter(edgeless) == 0
+    assert estimate_diameter(edgeless) == 0
+    assert edgeless.average_degree == 0.0
+    p = probe_graph(edgeless)
+    assert p.num_edges == 0 and p.hub_fraction == 0.0
+    assert np.isfinite(p.degree_gini)
+
+
+# -------------------------------------------- incremental probe maintenance
+def test_histogram_probes_match_direct_formulas():
+    rng = np.random.default_rng(5)
+    degrees = rng.integers(0, 40, size=500).astype(np.int64)
+    hist = degree_histogram(degrees)
+    assert int(hist.sum()) == 500
+    np.testing.assert_allclose(gini_from_histogram(hist),
+                               degree_gini(degrees), rtol=0, atol=1e-12)
+    lam, hub_fraction, hub_mass = hub_stats_from_histogram(hist)
+    np.testing.assert_allclose(lam, degrees.mean(), atol=1e-12)
+    hot = degrees > lam
+    np.testing.assert_allclose(hub_fraction, hot.mean(), atol=1e-12)
+    np.testing.assert_allclose(hub_mass, degrees[hot].sum() / degrees.sum(),
+                               atol=1e-12)
+
+
+def test_registry_incremental_probes_match_full_reprobe():
+    rng = np.random.default_rng(6)
+    g = powerlaw_community(300, avg_degree=6.0, seed=9, name="probe")
+    reg = GraphRegistry()
+    entry = reg.add(g, expected_queries=64)
+    diameter0 = entry.probes.diameter
+    add, remove = _random_delta(g, rng, 15, 12)
+    new_g, delta = apply_edge_delta(g, add_edges=add, remove_edges=remove)
+    mode = reg.apply_mutation("probe", new_g, delta, drift_threshold=0.5)
+    assert mode == "incremental"
+    full = probe_graph(new_g)
+    p = entry.probes
+    assert p.num_edges == full.num_edges
+    np.testing.assert_allclose(p.avg_degree, full.avg_degree, atol=1e-12)
+    np.testing.assert_allclose(p.degree_gini, full.degree_gini, atol=1e-12)
+    np.testing.assert_allclose(p.hub_fraction, full.hub_fraction, atol=1e-12)
+    np.testing.assert_allclose(p.hub_mass, full.hub_mass, atol=1e-12)
+    assert p.diameter == diameter0          # stale by design under patch
+    assert entry.probe_drift > 0.0
+
+
+def test_registry_drift_threshold_forces_full_reprobe():
+    rng = np.random.default_rng(7)
+    g = powerlaw_community(200, avg_degree=6.0, seed=10, name="drift")
+    reg = GraphRegistry()
+    entry = reg.add(g, expected_queries=64)
+    add, remove = _random_delta(g, rng, 10, 10)
+    new_g, delta = apply_edge_delta(g, add_edges=add, remove_edges=remove)
+    mode = reg.apply_mutation("drift", new_g, delta, drift_threshold=0.0)
+    assert mode == "full"
+    assert entry.probe_drift == 0.0         # reset by the full re-probe
+    assert entry.probes.diameter == probe_graph(new_g).diameter
+
+
+# ------------------------------------------- satellite: registry empty ids
+def test_registry_rejects_empty_graph_id():
+    g = from_edges(4, [0, 1], [1, 2], name="ok")
+    reg = GraphRegistry()
+    with pytest.raises(ValueError, match="non-empty"):
+        reg.add(g, graph_id="")
+    unnamed = from_edges(4, [0, 1], [1, 2], name="")
+    with pytest.raises(ValueError, match="empty name"):
+        reg.add(unnamed)
+    assert len(reg) == 0
+    reg.add(unnamed, graph_id="explicit")   # explicit id still works
+    assert "explicit" in reg
+
+
+# ------------------------------------- satellite: pinned-refresh cache fix
+def test_result_cache_pinned_refresh_at_capacity():
+    cache = ResultCache(max_entries=8, max_pinned=1)
+    row1, row2 = np.arange(3), np.arange(3) * 10
+    cache.put("g", 0, "pr", -1, row1, pinned=True)
+    # the pinned store is full; refreshing the SAME key must not be
+    # dropped (the bug: the stale row stayed pinned forever)
+    cache.put("g", 0, "pr", -1, row2, pinned=True)
+    np.testing.assert_array_equal(cache.get("g", 0, "pr", -1), row2)
+    assert cache.pinned_count == 1
+    # a second distinct pinned key still demotes to the LRU (unchanged)
+    cache.put("g", 0, "cc", -1, row1, pinned=True)
+    assert cache.pinned_count == 1 and cache.entries == 2
+
+
+# ------------------------------------------------------- policy re-decision
+def test_decision_changed_compares_material_fields():
+    d = PolicyDecision(scheme="lorder", kwargs={"kappa": 2}, reason="r",
+                       predicted_gain=0.1)
+    assert not decision_changed(None, None)
+    assert decision_changed(None, d) and decision_changed(d, None)
+    # reason / predicted gain churn on every decide; not material
+    assert not decision_changed(d, dataclasses.replace(
+        d, reason="other", predicted_gain=0.9))
+    assert decision_changed(d, dataclasses.replace(d, scheme="hubsort"))
+    assert decision_changed(d, dataclasses.replace(d, kwargs={"kappa": 3}))
+    assert decision_changed(d, dataclasses.replace(d, backend="sharded"))
+    assert decision_changed(d, dataclasses.replace(
+        d, hot_prefix_fraction=0.25))
+
+
+# ---------------------------------------------- update_graph: end to end
+@pytest.mark.parametrize("config", ["exact", "bucketed", "sharded"])
+def test_update_graph_matches_fresh_registration(config):
+    rng = np.random.default_rng(8)
+    g = powerlaw_community(400, avg_degree=8.0, seed=11, name="dyn")
+    session = _make(config)
+    gid = session.register(g, expected_queries=512)
+    gen0 = session.registry.get(gid).generation
+    for tier in ("patch", "patch", "full"):
+        add, remove = _random_delta(session.registry.get(gid).graph,
+                                    rng, 50, 40)
+        summary = session.update_graph(gid, add_edges=add,
+                                       remove_edges=remove, reorder=tier)
+        assert summary["tier"] == tier
+        assert summary["added"] == 50 and summary["removed"] == 40
+    entry = session.registry.get(gid)
+    assert entry.mutations == 3 and entry.generation >= gen0 + 3
+    ref = _make(config)
+    rid = ref.register(entry.graph, graph_id="fresh", expected_queries=512)
+    for kernel in KERNELS:
+        sources = [0, 17, 33] if kernel in ("bfs", "sssp", "bc") else None
+        _assert_matches(kernel, session.submit(gid, kernel, sources),
+                        ref.submit(rid, kernel, sources))
+    tel = session.telemetry()["mutations"]
+    assert tel["mutations"] == 3 and tel["patch_reorders"] == 2
+    assert tel["edges_added"] == 150 and tel["edges_removed"] == 120
+
+
+def test_update_graph_validation_and_noop():
+    g = from_edges(8, [0, 1, 2, 3], [1, 2, 3, 4], name="v")
+    session = _session()
+    gid = session.register(g, expected_queries=8)
+    gen0 = session.registry.get(gid).generation
+    with pytest.raises(KeyError):
+        session.update_graph("nope", add_edges=[[0, 1]])
+    with pytest.raises(ValueError, match="tier"):
+        session.update_graph(gid, add_edges=[[0, 1]], reorder="zap")
+    with pytest.raises(ValueError):
+        session.update_graph(gid, remove_edges=[[4, 0]])  # absent edge
+    summary = session.update_graph(gid)                   # empty delta
+    assert summary["tier"] == "noop"
+    assert session.registry.get(gid).generation == gen0
+    assert session.telemetry()["mutations"]["mutations"] == 0
+
+
+def test_inflight_future_resolves_pre_mutation_generation(plc_graph):
+    session = _session()
+    gid = session.register(plc_graph, expected_queries=256)
+    fut = session.enqueue(gid, "bfs", [2])
+    gen0 = session.registry.get(gid).generation
+    session.update_graph(gid, add_edges=[[2, 900]], reorder="patch")
+    # the fence flushed the queue first: the future resolved under the
+    # layout it was enqueued against, never the post-mutation one
+    assert fut.done()
+    assert fut.telemetry["generation"] == gen0
+    assert session.registry.get(gid).generation == gen0 + 1
+    ref = _session()
+    rid = ref.register(plc_graph, graph_id="pre", expected_queries=256)
+    _assert_matches("bfs", fut.result(), ref.submit(rid, "bfs", [2]))
+
+
+def test_mutation_invalidates_result_cache(plc_graph):
+    session = _session()
+    gid = session.register(plc_graph, expected_queries=256)
+    session.submit(gid, "pr")
+    session.submit(gid, "pr")
+    assert session.result_cache.hits >= 1
+    session.update_graph(gid, add_edges=[[0, 1], [1, 0]], reorder="patch")
+    assert session.result_cache.entries == 0   # every row invalidated
+    got = session.submit(gid, "pr")
+    ref = _session()
+    rid = ref.register(session.registry.get(gid).graph, graph_id="post",
+                       expected_queries=256)
+    _assert_matches("pr", got, ref.submit(rid, "pr"))
+
+
+def test_async_full_reorder_swaps_at_flush_boundary():
+    rng = np.random.default_rng(9)
+    g = powerlaw_community(300, avg_degree=8.0, seed=5, name="swap")
+    session = _session()                       # inline reorder, fenced swap
+    gid = session.register(g, expected_queries=512)
+    add, remove = _random_delta(g, rng, 40, 30)
+    summary = session.update_graph(gid, add_edges=add, remove_edges=remove,
+                                   reorder="async")
+    assert summary["full_reorder_scheduled"]
+    assert gid in session._pending_swaps       # computed, awaiting a flush
+    gen_patched = session.registry.get(gid).generation
+    session.flush()
+    entry = session.registry.get(gid)
+    assert gid not in session._pending_swaps
+    assert entry.generation == gen_patched + 1
+    tel = session.telemetry()["mutations"]
+    assert tel["layout_swaps"] == 1 and tel["layout_swaps_discarded"] == 0
+    names = {ev["name"] for ev in session.tracer.events}
+    assert {"mutate", "patch_reorder", "swap_layout"} <= names
+    ref = _session()
+    rid = ref.register(entry.graph, graph_id="fresh", expected_queries=512)
+    for kernel in ("bfs", "cc"):
+        sources = [1, 7] if kernel == "bfs" else None
+        _assert_matches(kernel, session.submit(gid, kernel, sources),
+                        ref.submit(rid, kernel, sources))
+
+
+def test_stale_pending_swap_discarded_by_token():
+    g = powerlaw_community(200, avg_degree=8.0, seed=12, name="stale")
+    session = _session()
+    gid = session.register(g, expected_queries=256)
+    entry = session.registry.get(gid)
+    gen0 = entry.generation
+    session._pending_swaps[gid] = _PendingSwap(
+        entry.decision, np.asarray(entry.perm).copy(), 0.0,
+        token=entry.mutations - 1, trigger="stale")
+    session.flush()
+    assert gid not in session._pending_swaps
+    assert entry.generation == gen0            # stale swap never applied
+    tel = session.telemetry()["mutations"]
+    assert tel["layout_swaps"] == 0 and tel["layout_swaps_discarded"] == 1
+
+
+def test_threaded_async_reorders_all_accounted_for():
+    rng = np.random.default_rng(10)
+    g = powerlaw_community(300, avg_degree=8.0, seed=6, name="thr")
+    session = _session(async_full_reorder=True)
+    gid = session.register(g, expected_queries=512)
+    scheduled = 0
+    for _ in range(3):
+        add, remove = _random_delta(session.registry.get(gid).graph,
+                                    rng, 30, 20)
+        summary = session.update_graph(gid, add_edges=add,
+                                       remove_edges=remove, reorder="async")
+        scheduled += int(summary["full_reorder_scheduled"])
+        session.submit(gid, "bfs", [1])
+    session.close()                            # joins workers, then drains
+    tel = session.telemetry()["mutations"]
+    assert tel["pending_swaps"] == []
+    # the invariant: every scheduled reorder either swapped in at a flush
+    # boundary or was discarded by the mutation-token fence — never lost,
+    # never applied against a graph that no longer exists
+    assert tel["layout_swaps"] + tel["layout_swaps_discarded"] == scheduled
+
+
+@pytest.mark.parametrize("config", ["bucketed", "sharded"])
+def test_drain_to_edgeless_and_regrow(config):
+    g = powerlaw_community(120, avg_degree=4.0, seed=3, name="drain")
+    session = _make(config)
+    gid = session.register(g, expected_queries=128)
+    pairs = _edge_pairs(session.registry.get(gid).graph)
+    session.update_graph(gid, remove_edges=pairs, reorder="patch")
+    assert session.registry.get(gid).graph.num_edges == 0
+    ref = _make(config)
+    rid = ref.register(from_edges(120, [], [], name="edgeless"),
+                       expected_queries=128)
+    _assert_matches("bfs", session.submit(gid, "bfs", [0]),
+                    ref.submit(rid, "bfs", [0]))
+    # regrow to the original multiset: results must match the original
+    session.update_graph(gid, add_edges=pairs, reorder="full")
+    ref2 = _make(config)
+    rid2 = ref2.register(g, graph_id="orig", expected_queries=128)
+    for kernel in ("bfs", "cc"):
+        sources = [0, 5] if kernel == "bfs" else None
+        _assert_matches(kernel, session.submit(gid, kernel, sources),
+                        ref2.submit(rid2, kernel, sources))
+
+
+# ----------------------------------------------------- property: sequences
+def _run_mutation_sequence(config: str, seed: int, steps: int,
+                           tiers, draws) -> None:
+    """Shared driver: apply a random mutation sequence through the given
+    tiers, then assert bit-identity (allclose for pr) against a fresh
+    session registered with the final graph.
+
+    ``draws(lo, hi, label)`` supplies the per-step delta sizes — an rng
+    closure for the seeded leg, hypothesis draws for the property leg.
+    """
+    rng = np.random.default_rng(seed)
+    n, m = 32, 96
+    g = from_edges(n, rng.integers(0, n, m), rng.integers(0, n, m),
+                   name="prop")
+    session = _make(config)
+    gid = session.register(g, graph_id="g", expected_queries=256)
+    for step in range(steps):
+        cur = session.registry.get(gid).graph
+        k_rem = draws(0, min(cur.num_edges, 20), f"k_rem{step}")
+        remove = None
+        if k_rem:
+            idx = rng.choice(cur.num_edges, size=k_rem, replace=False)
+            remove = _edge_pairs(cur)[idx]
+        k_add = draws(0, 20, f"k_add{step}")
+        add = rng.integers(0, n, size=(k_add, 2)) if k_add else None
+        session.update_graph(gid, add_edges=add, remove_edges=remove,
+                             reorder=tiers[step % len(tiers)])
+    final = session.registry.get(gid).graph
+    ref = _make(config)
+    rid = ref.register(final, graph_id="ref", expected_queries=256)
+    for kernel, sources in (("bfs", [0, 5]), ("pr", None), ("cc", None)):
+        _assert_matches(kernel, session.submit(gid, kernel, sources),
+                        ref.submit(rid, kernel, sources))
+
+
+@pytest.mark.parametrize("config", ["exact", "bucketed", "sharded"])
+def test_update_graph_random_sequences_seeded(config):
+    """Always-on leg of the sequence property: fixed seeds, mixed tiers."""
+    for seed, tiers in ((13, ("patch", "full", "patch")),
+                        (29, ("full", "patch"))):
+        rng = np.random.default_rng(seed + 1000)
+        _run_mutation_sequence(
+            config, seed, steps=3, tiers=tiers,
+            draws=lambda lo, hi, _label: int(rng.integers(lo, hi + 1)))
+
+
+@pytest.mark.parametrize("config", ["exact", "bucketed", "sharded"])
+def test_update_graph_property_random_sequences(config):
+    """Random mutation sequences through random tiers stay bit-identical
+    (allclose for pr) to registering the final graph fresh
+    (hypothesis-driven when available)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=5, deadline=None)
+    @given(data=st.data())
+    def check(data):
+        seed = data.draw(st.integers(0, 2**16), label="seed")
+        steps = data.draw(st.integers(1, 3), label="steps")
+        tiers = tuple(
+            data.draw(st.sampled_from(["patch", "full"]), label=f"tier{i}")
+            for i in range(steps))
+        _run_mutation_sequence(
+            config, seed, steps, tiers,
+            draws=lambda lo, hi, label: data.draw(
+                st.integers(lo, hi), label=label))
+
+    check()
+
+
+# -------------------------------------------------------- distributed leg
+def test_mutations_four_forced_devices():
+    """Re-run this module on 4 forced host devices so the sharded configs
+    exercise a genuine mesh (same recipe as test_scheduler.py)."""
+    res = run_forced_four_devices(
+        ["-m", "pytest", "-q", os.path.abspath(__file__),
+         "-k", "not four_forced"], timeout=900)
+    assert res.returncode == 0, \
+        f"stdout={res.stdout[-4000:]}\nstderr={res.stderr[-2000:]}"

@@ -306,7 +306,12 @@ def test_scheduler_telemetry_golden_schema(obs_graph):
                                       "hit_rate"}
     top = session.telemetry()
     assert set(top) == {"executor", "scheduler", "policy", "calibration",
-                        "redecisions", "graphs"}
+                        "redecisions", "mutations", "graphs"}
+    assert set(top["mutations"]) == {"mutations", "edges_added",
+                                     "edges_removed", "patch_reorders",
+                                     "layout_swaps",
+                                     "layout_swaps_discarded",
+                                     "pending_swaps"}
     led = top["graphs"]["g"]["ledger"]
     assert "break_even_never" in led
     assert led["break_even_queries"] is None or \
