@@ -52,6 +52,13 @@ Phases:
     at a wall cost >= 10x below a measured full LOrder pass, serve p99
     stays bounded across generations, and post-churn results stay
     bit-identical to a fresh session on the final mutated graph.
+12. **knn** — the search workload (docs/search.md): a Zipf query mix
+    over a clustered NSW corpus served through ``enqueue``, recall@10
+    against brute force, serve p50/p99, the visit-telemetry reorder
+    loop (``refresh_hotness``: full visitsort then the patch tier), and
+    a simulated vector-cache miss-rate comparison of identity vs
+    degree-ordered vs visit-ordered layouts — degree is uniform on
+    search graphs, so the observed-visit layout must win.
 
 Emits benchmarks/results/engine.json.
 """
@@ -865,9 +872,138 @@ def _phase_churn(scale, rounds: int = 8, queries_per_round: int = 12):
     return out
 
 
+def _phase_knn(scale, bursts: int = 4, queries_per_burst: int = 24):
+    """k-NN search serving: recall, latency, and visit-driven reordering.
+
+    A clustered NSW corpus (Zipf cluster sizes) serves a Zipf query mix
+    through the request plane. After traffic accumulates,
+    ``refresh_hotness`` folds the visit telemetry into the layout (full
+    visitsort, then the steady-state patch tier). The locality claim is
+    checked with the cache simulator: the per-query visited-vertex
+    traces are replayed over the *vector rows* under three layouts —
+    identity, degree-ordered (hubsort; structurally blind here, every
+    row has out-degree k), and visit-ordered — and the visit-ordered
+    layout must show the lowest simulated miss rate. Recall@10 against
+    brute force and bit-identity across the reorder are reported too.
+    """
+    from repro.cache.sim import CacheConfig, simulate_misses
+    from repro.core.baselines import hubsort_order, knn_search_baseline
+    from repro.core.generators import clustered_vectors
+    from repro.engine import EngineSession
+    from repro.engine.obs import merge_histogram_snapshots
+    from repro.search import (SearchParams, build_nsw_graph,
+                              knn_brute_force, medoid_entry, visit_order)
+
+    n = max(700, int(2400 * scale))
+    dim, k_out, k_ret, beam = 16, 12, 10, 32
+    # spread 0.4: clusters overlap enough for greedy search to stay
+    # navigable across them at this dimensionality (recall ~1.0 at beam
+    # 32) while each query still touches only ~20% of the corpus — the
+    # visit skew the reorder loop needs
+    vecs, _ = clustered_vectors(n, dim=dim, num_clusters=8, zipf=1.2,
+                                seed=21, spread=0.4)
+    g = build_nsw_graph(vecs, k=k_out)
+    oracle_entry = medoid_entry(vecs)
+
+    s = EngineSession(redecide_min_queries=10**9, async_full_reorder=False)
+    s.register(g, graph_id="knn", vectors=vecs, expected_queries=1024,
+               search_params=SearchParams(k_out=k_out, beam_width=beam,
+                                          k_return=k_ret))
+    entry = s.registry.get("knn")
+
+    def zipf_queries(seed):
+        r = np.random.default_rng(seed)
+        base = (r.zipf(1.2, size=queries_per_burst) - 1) % n
+        return (vecs[base]
+                + r.normal(0, 0.02, (queries_per_burst, dim))
+                ).astype(np.float32)
+
+    all_q, all_ids = [], []
+
+    def serve_burst(seed):
+        q = zipf_queries(seed)
+        fut = s.enqueue("knn", "knn", q)
+        s.flush("knn")
+        all_q.append(q)
+        all_ids.append(np.asarray(fut.result()))
+
+    serve_burst(0)
+    r1 = s.refresh_hotness("knn")       # telemetry present -> visitsort
+    # bit-identity across the reorder: replay burst 0 under the new layout
+    replay = np.asarray(s.submit("knn", "knn", all_q[0]))
+    reorder_bit_identical = bool(np.array_equal(replay, all_ids[0]))
+    for i in range(1, bursts):
+        serve_burst(i)
+    r2 = s.refresh_hotness("knn")       # steady state -> patch tier
+
+    queries = np.concatenate(all_q)
+    served = np.concatenate(all_ids)
+    oracle = knn_brute_force(vecs, queries, k_ret)
+    recall = float(np.mean([
+        len(set(map(int, a)) & set(map(int, b))) / k_ret
+        for a, b in zip(served, oracle)]))
+
+    # ---- simulated miss rates per layout -------------------------------
+    # trace: visited original ids per query (host mirror of the served
+    # kernel), replayed as accesses to a 4-byte per-vertex property
+    # array (visit counters / distance caches — 16 vertices per line,
+    # where hot-prefix packing creates line sharing; the 64-byte vector
+    # rows each fill a whole line, so they are permutation-invariant by
+    # construction). Capacity ~70% of the property array keeps the
+    # packed hot set resident while cold traffic churns.
+    trace = np.concatenate([
+        np.nonzero(knn_search_baseline(g, vecs, q, oracle_entry,
+                                       beam_width=beam)[1])[0]
+        for q in queries])
+    cfg = CacheConfig(size_bytes=max(1024, n * 4 * 7 // 10),
+                      ways=8, line_bytes=64, prop_bytes=4, sample_rate=1)
+    visits = np.zeros(n)
+    visits[:len(entry.visit_ewma)] = entry.visit_ewma
+    perms = {
+        "identity": np.arange(n, dtype=np.int64),
+        "degree": hubsort_order(g),
+        "visits": visit_order(visits),
+    }
+    miss = {name: round(simulate_misses(perm[trace], cfg)["miss_rate"], 4)
+            for name, perm in perms.items()}
+
+    snap = s.metrics().snapshot()["histograms"]
+    serve = merge_histogram_snapshots(
+        list(snap.get("engine_serve_seconds", {}).values()))
+    tel = s.telemetry()
+    out = {
+        "num_vectors": n,
+        "dim": dim,
+        "k_out": k_out,
+        "queries": int(len(queries)),
+        "recall_at_10": round(recall, 4),
+        "recall_ok": bool(recall >= 0.95),
+        "reorder_bit_identical": reorder_bit_identical,
+        "refresh_first": {k: r1[k] for k in
+                          ("tier", "scheme", "hotness_source",
+                           "hot_prefix_len")},
+        "refresh_steady": {k: r2[k] for k in ("tier", "scheme")},
+        "visit_gini": round(entry.probes.visit_gini, 4),
+        "visit_hub_fraction": round(entry.probes.visit_hub_fraction, 4),
+        "patch_reorders": tel["mutations"]["patch_reorders"],
+        "sim_miss_rate": miss,
+        "visits_beats_degree": bool(miss["visits"] <= miss["degree"]),
+        "serve_p50_ms": round((serve.get("p50") or 0.0) * 1e3, 3),
+        "serve_p99_ms": round((serve.get("p99") or 0.0) * 1e3, 3),
+        "result_cache": tel["scheduler"]["result_cache"],
+    }
+    s.close(drain=False)
+    print(f"[engine] knn: {n} vectors, recall@10 {recall:.3f}, "
+          f"{r1['tier']}/{r1['scheme']} then {r2['tier']}; sim miss "
+          f"identity {miss['identity']:.3f} / degree {miss['degree']:.3f}"
+          f" / visits {miss['visits']:.3f}, serve p99 "
+          f"{out['serve_p99_ms']:.1f}ms", flush=True)
+    return out
+
+
 PHASES = ("decisions", "redecision", "calibration", "bucketing", "sharded",
           "hot_prefix", "fused", "scheduler", "observability", "sustained",
-          "churn")
+          "churn", "knn")
 
 
 def parse_phases(value: str | None) -> list[str]:
@@ -923,6 +1059,8 @@ def run(scale: float = 0.5, batch: int = 8, repeats: int = 5,
         out["sustained"] = _phase_sustained(scale)
     if "churn" in todo:
         out["churn"] = _phase_churn(scale)
+    if "knn" in todo:
+        out["knn"] = _phase_knn(scale)
 
     out["calibration"] = session.policy.calibrator.as_dict()
     out["executor"] = session.executor.telemetry()

@@ -294,6 +294,118 @@ def bc_single_source(g: GraphArrays, source: jnp.ndarray) -> jnp.ndarray:
     return delta.at[source].set(0.0)
 
 
+# ------------------------------------------------------- k-NN beam search
+#
+# The search-serving workload (ROADMAP item 4, Coleman et al.): greedy
+# best-first traversal of a fixed out-degree k-NN graph with a bounded
+# beam, one `lax.while_loop` per query in the PR 7 fused-loop style.
+# Candidates are ranked by the lexicographic pair
+#
+#     (float32_dist_bits, canonical_id)
+#
+# squared-L2 distances are non-negative, so their float32 bit patterns
+# are order-preserving as int32 — and the canonical (original) vertex id
+# breaks every distance tie layout-invariantly. That single invariant is
+# what buys bit-identical results across {exact, bucketed, sharded}
+# backends and any reorder. (A packed ``bits << 31 | id`` int64 key would
+# be one array instead of two, but x64 stays off repo-wide; `lexsort`
+# over the pair is the same total order.) KNN_SENTINEL exceeds the bit
+# pattern of any real distance (+inf is 0x7F800000), so empty beam slots
+# and already-visited candidates sort strictly last.
+
+KNN_SENTINEL = 2**31 - 1  # int32 max
+
+
+def _dist_bits(dist: jnp.ndarray) -> jnp.ndarray:
+    return lax.bitcast_convert_type(dist.astype(jnp.float32), jnp.int32)
+
+
+def knn_search(g: GraphArrays, vectors: jnp.ndarray, canon: jnp.ndarray,
+               entry: jnp.ndarray, query: jnp.ndarray, *, k_out: int,
+               beam_width: int, k_return: int, max_steps: int
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One query -> ``(ids, visited)``: the ``k_return`` nearest served
+    vertex ids found (-1 in empty slots) and the (V,) visited mask whose
+    per-query sum is the visit-frequency telemetry the reorder policy
+    consumes.
+
+    ``vectors`` are in served order, ``canon`` maps served -> original
+    id. Rows must hold exactly ``k_out`` distinct non-self neighbors
+    (self-loop padding is inert: a row's owner is already visited when
+    the row is expanded). Not module-jitted — the engine wraps it per
+    (shape, params) so compile-cache keys stay static-arg-aware, like
+    ``pagerank_spmv``.
+    """
+    n = g.num_vertices
+    q = query.astype(jnp.float32)
+    sent = jnp.int32(KNN_SENTINEL)
+
+    def dists(ids):
+        diff = vectors[ids] - q
+        return jnp.sum(diff * diff, axis=-1)
+
+    e = entry.astype(jnp.int32)
+    bits0 = jnp.full((beam_width,), sent, jnp.int32)
+    bits0 = bits0.at[0].set(_dist_bits(dists(e[None])[0]))
+    tie0 = jnp.full((beam_width,), sent, jnp.int32)
+    tie0 = tie0.at[0].set(canon[e])
+    ids0 = jnp.zeros((beam_width,), jnp.int32).at[0].set(e)
+    exp0 = jnp.zeros((beam_width,), jnp.bool_)
+    visited0 = jnp.zeros((n,), jnp.bool_).at[e].set(True)
+
+    def cond(state):
+        bits, _, _, exp, _, step = state
+        return (~exp & (bits < sent)).any() & (step < max_steps)
+
+    def body(state):
+        bits, tie, ids, exp, visited, step = state
+        # nearest unexpanded slot under the (bits, tie) order: min bits
+        # first, canonical id breaks distance ties (each vertex enters
+        # the beam at most once, so ties are genuinely distinct vertices)
+        masked_bits = jnp.where(exp, sent, bits)
+        m = masked_bits.min()
+        slot = jnp.argmin(jnp.where(exp | (bits != m), sent, tie))
+        v = ids[slot]
+        exp = exp.at[slot].set(True)
+        nbrs = lax.dynamic_slice(g.indices, (g.indptr[v],), (k_out,))
+        fresh = ~visited[nbrs]
+        visited = visited.at[nbrs].set(True)
+        # gather(vectors, nbrs): the reuse-heavy read the reorder packs
+        nbits = jnp.where(fresh, _dist_bits(dists(nbrs)), sent)
+        ntie = jnp.where(fresh, canon[nbrs], sent)
+        all_bits = jnp.concatenate([bits, nbits])
+        all_tie = jnp.concatenate([tie, ntie])
+        all_ids = jnp.concatenate([ids, nbrs.astype(jnp.int32)])
+        all_exp = jnp.concatenate(
+            [exp, jnp.zeros((k_out,), jnp.bool_)])
+        keep = jnp.lexsort((all_tie, all_bits))[:beam_width]
+        return (all_bits[keep], all_tie[keep], all_ids[keep],
+                all_exp[keep], visited, step + 1)
+
+    bits, _, ids, _, visited, _ = lax.while_loop(
+        cond, body, (bits0, tie0, ids0, exp0, visited0, jnp.int32(0)))
+    # the beam is kept sorted by every merge, so the head is the result
+    top = jnp.where(bits[:k_return] < sent, ids[:k_return], -1)
+    return top, visited
+
+
+def knn_search_multi(g: GraphArrays, vectors: jnp.ndarray,
+                     canon: jnp.ndarray, entry: jnp.ndarray,
+                     queries: jnp.ndarray, valid: jnp.ndarray, *,
+                     k_out: int, beam_width: int, k_return: int,
+                     max_steps: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched search: (S, d) queries -> ((S, k_return) served ids,
+    (V,) int32 visit counts). ``valid`` masks padded query lanes out of
+    the visit accounting (pad lanes repeat row 0 and would otherwise
+    inflate the telemetry)."""
+    ids, visited = jax.vmap(
+        lambda qv: knn_search(g, vectors, canon, entry, qv, k_out=k_out,
+                              beam_width=beam_width, k_return=k_return,
+                              max_steps=max_steps))(queries)
+    visits = (visited & valid[:, None]).sum(axis=0).astype(jnp.int32)
+    return ids, visits
+
+
 # ---------------------------------------------- batched multi-source variants
 #
 # The serving engine amortizes one compile over many concurrent queries:

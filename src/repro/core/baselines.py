@@ -298,6 +298,50 @@ def bc_baseline(g: Graph, sources) -> np.ndarray:
     return total
 
 
+def knn_search_baseline(g: Graph, vectors: np.ndarray, query: np.ndarray,
+                        entry: int, beam_width: int = 32, k_return: int = 10,
+                        max_steps: int | None = None
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Host beam search mirroring algos.kernels.knn_search in original-id
+    space: same composite (float32-distance-bits, id) ranking keys, same
+    bounded beam-and-merge, same visited accounting. Returns
+    ``(ids (k_return,) int64 with -1 padding, visited (V,) bool)``.
+
+    Distances are float32 like the kernel's; summation *order* may differ
+    from XLA's, so exact key parity holds when coordinates are
+    integer-valued (exact float32 sums) and is recall-level otherwise.
+    """
+    vecs = np.asarray(vectors, np.float32)
+    q = np.asarray(query, np.float32)
+    if max_steps is None:
+        max_steps = 2 * beam_width + 32  # search.serve.default_max_steps
+
+    def key(v):
+        d = np.float32(((vecs[v] - q) ** 2).sum(dtype=np.float32))
+        return (int(d.view(np.int32)), int(v))  # lexicographic, like jnp
+
+    beam = [(key(entry), int(entry), False)]
+    visited = np.zeros(g.num_vertices, dtype=bool)
+    visited[entry] = True
+    for _ in range(max_steps):
+        frontier = [(k, v) for k, v, e in beam if not e]
+        if not frontier:
+            break
+        _, best = min(frontier)
+        beam = [(k, v, e or v == best) for k, v, e in beam]
+        for w in map(int, g.neighbors(best)):
+            if visited[w]:
+                continue
+            visited[w] = True
+            beam.append((key(w), w, False))
+        beam.sort(key=lambda t: t[0])
+        del beam[beam_width:]
+    ids = np.full(k_return, -1, dtype=np.int64)
+    for i, (_, v, _) in enumerate(beam[:k_return]):
+        ids[i] = v
+    return ids, visited
+
+
 # ---------------------------------------------------------------- registry
 def reordering_registry() -> dict:
     """name -> callable(graph, **kw) for the benchmark harness."""

@@ -131,6 +131,30 @@ def road_grid(side: int, shortcuts: int = 0, seed: int = 0,
                       np.concatenate([dst, src]), dedup=True, name=name)
 
 
+def clustered_vectors(num_vectors: int, dim: int = 16,
+                      num_clusters: int = 8, spread: float = 0.15,
+                      zipf: float = 1.1, seed: int = 0
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Synthetic vector corpus for the k-NN search workload (search/).
+
+    Gaussian blobs around ``num_clusters`` random centers with Zipf-skewed
+    cluster sizes — the skew is what makes a *query* mix concentrate visits
+    on the popular clusters' vertices, mirroring the visit-frequency skew
+    Coleman et al. exploit on search graphs. Returns ``(vectors, labels)``
+    with float32 ``(N, dim)`` vectors and int64 cluster labels.
+    """
+    rng = _rng(seed)
+    n, k = num_vectors, max(1, num_clusters)
+    sizes = 1.0 / np.arange(1, k + 1) ** zipf
+    sizes = np.maximum((sizes / sizes.sum() * n).astype(np.int64), 1)
+    sizes[0] += n - sizes.sum()  # absorb rounding in the largest cluster
+    labels = np.repeat(np.arange(k), sizes)[:n]
+    rng.shuffle(labels)
+    centers = rng.standard_normal((k, dim))
+    vecs = centers[labels] + spread * rng.standard_normal((n, dim))
+    return vecs.astype(np.float32), labels
+
+
 # --------------------------------------------------------------------------
 # Dataset registry: the paper's six datasets, regenerated in-kind.
 # scale=1.0 is the default benchmark size; tests use smaller scales.

@@ -39,6 +39,7 @@ class MutationDelta:
     out_degree_delta: np.ndarray   # per changed vertex, may be 0
     in_degree_delta: np.ndarray
     degree_delta: np.ndarray       # out + in, aligned with changed_vertices
+    vertices_added: int = 0        # vertex-set growth (ids appended at top)
 
     @property
     def edges_changed(self) -> int:
@@ -78,23 +79,31 @@ def _sparse_degree_delta(touched: np.ndarray, add: np.ndarray,
     return delta
 
 
-def apply_edge_delta(g: Graph, add_edges=None,
-                     remove_edges=None) -> tuple[Graph, MutationDelta]:
+def apply_edge_delta(g: Graph, add_edges=None, remove_edges=None,
+                     add_vertices: int = 0) -> tuple[Graph, MutationDelta]:
     """Apply an edge delta; returns ``(fresh_graph, delta_summary)``.
 
-    The vertex set is fixed — deltas add/remove *edges* between existing
+    ``add_vertices`` grows the vertex set by that many ids, appended at
+    the top of the id range — ``add_edges`` may then reference the new
+    ids (the search workload's incremental NSW inserts arrive this way,
+    `search.knn_graph.nsw_insert_deltas`). With ``add_vertices=0`` the
+    vertex set is fixed — deltas add/remove *edges* between existing
     vertices (a graph can drain to edgeless and regrow). The fresh graph
     keeps the `Graph` CSR invariants (rows ascending, per-row neighbor
     lists sorted) and carries the original ``communities``/``name``.
     An empty delta returns ``g`` itself (every cached view still valid).
     """
-    n = g.num_vertices
+    if add_vertices < 0:
+        raise ValueError(f"add_vertices must be >= 0, got {add_vertices}")
+    n = g.num_vertices + int(add_vertices)
     asrc, adst = _as_edge_pairs(add_edges, n, "add_edges")
     rsrc, rdst = _as_edge_pairs(remove_edges, n, "remove_edges")
-    if asrc.size == 0 and rsrc.size == 0:
+    if asrc.size == 0 and rsrc.size == 0 and add_vertices == 0:
         touched = np.empty(0, dtype=np.int64)
         zero = np.empty(0, dtype=np.int64)
         return g, MutationDelta(0, 0, touched, zero, zero.copy(), zero.copy())
+    if rsrc.size and (rsrc >= g.num_vertices).any():
+        raise ValueError("remove_edges references newly added vertices")
 
     key = g.edge_src.astype(np.int64) * np.int64(n) + g.indices
     key = np.sort(key, kind="stable")  # defensive: manual CSRs may be ragged
@@ -115,14 +124,16 @@ def apply_edge_delta(g: Graph, add_edges=None,
         key = key[~drop]
     new_src = np.concatenate([key // n, asrc])
     new_dst = np.concatenate([key % n, adst])
-    new_g = from_edges(n, new_src, new_dst, communities=g.communities,
-                       name=g.name)
+    # per-vertex metadata (communities) doesn't extend to grown ids
+    comms = g.communities if add_vertices == 0 else None
+    new_g = from_edges(n, new_src, new_dst, communities=comms, name=g.name)
 
     # transplant the degree caches in O(V + |delta|): the delta fully
     # describes every endpoint change, so the fresh graph never pays the
     # O(E) bincount that `in_degree` would lazily recompute
-    out_deg = np.asarray(g.out_degree, dtype=np.int64).copy()
-    in_deg = np.asarray(g.in_degree, dtype=np.int64).copy()
+    grow = (0, int(add_vertices))
+    out_deg = np.pad(np.asarray(g.out_degree, dtype=np.int64), grow)
+    in_deg = np.pad(np.asarray(g.in_degree, dtype=np.int64), grow)
     if asrc.size:
         np.add.at(out_deg, asrc, 1)
         np.add.at(in_deg, adst, 1)
@@ -140,7 +151,8 @@ def apply_edge_delta(g: Graph, add_edges=None,
     changed = total != 0
     delta = MutationDelta(int(asrc.size), int(rsrc.size),
                           touched[changed], out_delta[changed],
-                          in_delta[changed], total[changed])
+                          in_delta[changed], total[changed],
+                          vertices_added=int(add_vertices))
     return new_g, delta
 
 

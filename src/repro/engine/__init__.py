@@ -16,9 +16,9 @@ re-reordering in place at flush boundaries — when realized traffic
 diverges from the registration hint or a reorder provably cannot
 amortize.
 """
-from .backends import (SHARDED_KERNELS, ExecutionBackend, GraphHandle,
-                       ShardedBackend, SingleDeviceBackend, bucket_dims,
-                       estimate_device_bytes)
+from .backends import (SHARDED_KERNELS, VECTOR_SOURCE, ExecutionBackend,
+                       GraphHandle, ShardedBackend, SingleDeviceBackend,
+                       bucket_dims, estimate_device_bytes)
 from .calibration import DEFAULT_PRIORS, SchemeStats, StrengthCalibrator
 from .executor import BatchedExecutor
 from .obs import (Clock, Counter, Gauge, Histogram, ManualClock,
@@ -44,7 +44,8 @@ __all__ = [
     "PolicyDecision", "PolicyRecord", "ProfilerHook", "QueryFuture",
     "RateWindow", "ReorderPolicy", "Request", "ResultCache",
     "SHARDED_KERNELS", "SchemeStats", "ShardedBackend",
-    "SingleDeviceBackend", "StrengthCalibrator", "Tracer", "bucket_dims",
+    "SingleDeviceBackend", "StrengthCalibrator", "Tracer",
+    "VECTOR_SOURCE", "bucket_dims",
     "canonical_component_labels", "decision_changed", "degree_histogram",
     "estimate_device_bytes", "gini_from_histogram",
     "hub_stats_from_histogram", "probe_graph", "validate_chrome_trace",

@@ -45,16 +45,23 @@ import jax.numpy as jnp
 from ..algos import kernels as K
 from ..algos.graph_arrays import GraphArrays, to_device
 from ..core.csr import Graph
+from ..search.serve import SearchSpec, pad_queries
 from .obs import MetricsRegistry, Tracer
 
 # kernels taking a batch of sources -> (S, V) per-source rows
 MULTI_SOURCE = ("bfs", "sssp", "bc")
 # source-independent kernels -> (V,)
 GLOBAL = ("pr", "cc", "ccsv")
+# kernels whose "source" is a float32 vector, not a vertex id -> the
+# per-source row is a (k_return,) id vector; runs also return (V,)
+# visit counts (the reorder policy's hotness telemetry)
+VECTOR_SOURCE = ("knn",)
 
 # All entries are already jitted in algos.kernels; jax's own cache
 # specializes per CSR shape. The backend's key-level dict on top exists
 # to *attribute* compiles to serving traffic (hit/miss telemetry).
+# knn is the exception: its static beam/step knobs force the per-key
+# jit wrapper pattern (_run_knn), mirroring the pr@spmv path.
 _FNS = {
     "bfs": K.bfs_multi,
     "sssp": K.sssp_multi,
@@ -62,6 +69,7 @@ _FNS = {
     "pr": K.pagerank,
     "cc": K.cc_labelprop,
     "ccsv": K.cc_shiloach_vishkin,
+    "knn": K.knn_search_multi,
 }
 
 
@@ -69,8 +77,9 @@ def build_kernel(kernel: str):
     try:
         return _FNS[kernel]
     except KeyError:
-        raise ValueError(f"unknown kernel {kernel!r}; "
-                         f"have {MULTI_SOURCE + GLOBAL}") from None
+        raise ValueError(
+            f"unknown kernel {kernel!r}; "
+            f"have {MULTI_SOURCE + GLOBAL + VECTOR_SOURCE}") from None
 
 
 def source_bucket(n: int) -> int:
@@ -185,6 +194,37 @@ class GraphHandle:
     shard_state: object | None = None
     hot_prefix_fraction: float | None = None  # sharded exchange policy
     spmv: PackedSpMV | None = None  # Pallas PR relaxation operands
+    search: "DeviceSearch | None" = None  # knn operands (search graphs)
+
+
+@dataclasses.dataclass
+class DeviceSearch:
+    """Device-resident knn operands for one uploaded search graph.
+
+    ``vectors``/``canon`` are the `SearchSpec` payloads padded to the
+    handle's vertex bucket (padded rows are unreachable: sentinel edges
+    never land in a real adjacency list, so the kernel cannot gather
+    them). ``params`` are the compile-static beam knobs.
+    """
+
+    vectors: jnp.ndarray   # (V_bucket, d) float32, served order
+    canon: jnp.ndarray     # (V_bucket,) int32 served -> original
+    entry: int             # served id of the entry vertex
+    params: object         # search.serve.SearchParams
+    dim: int
+
+
+def _device_search(spec: SearchSpec, v_bucket: int) -> DeviceSearch:
+    vecs = np.ascontiguousarray(spec.vectors, dtype=np.float32)
+    canon = np.ascontiguousarray(spec.canon, dtype=np.int32)
+    if v_bucket > len(vecs):
+        vecs = np.concatenate(
+            [vecs, np.zeros((v_bucket - len(vecs), vecs.shape[1]),
+                            np.float32)])
+        canon = np.concatenate(
+            [canon, np.arange(len(canon), v_bucket, dtype=np.int32)])
+    return DeviceSearch(jnp.asarray(vecs), jnp.asarray(canon),
+                        int(spec.entry), spec.params, int(vecs.shape[1]))
 
 
 @runtime_checkable
@@ -312,7 +352,8 @@ class SingleDeviceBackend:
 
     # -------------------------------------------------------------- prepare
     def prepare(self, graph: Graph,
-                canonical_ids: np.ndarray | None = None) -> GraphHandle:
+                canonical_ids: np.ndarray | None = None,
+                search: SearchSpec | None = None) -> GraphHandle:
         n, e = graph.num_vertices, graph.num_edges
         bucket = (bucket_dims(n, e, self.growth, self.v_floor, self.e_floor)
                   if self.bucketing else (n, e))
@@ -321,9 +362,10 @@ class SingleDeviceBackend:
         self._counters["prepared"].inc()
         self._bucket_counts[bucket] = self._bucket_counts.get(bucket, 0) + 1
         spmv = self._pack_spmv(arrays) if self.pallas_pr else None
+        ds = _device_search(search, bucket[0]) if search is not None else None
         return GraphHandle(self.name, n, e, bucket,
                            estimate_device_bytes(*bucket), arrays=arrays,
-                           spmv=spmv)
+                           spmv=spmv, search=ds)
 
     def _pack_spmv(self, arrays: GraphArrays) -> PackedSpMV:
         """Pack the (bucketed) in-CSR edge stream for the Pallas kernel.
@@ -416,8 +458,37 @@ class SingleDeviceBackend:
         with self._span("device_sync", kernel="pr"):
             return jax.block_until_ready(out)
 
+    def _run_knn(self, handle: GraphHandle, queries) -> tuple:
+        """Beam search over the uploaded search graph: (S, d) queries ->
+        ``((S, k_return) served ids, (V,) visit counts)``. The beam knobs
+        are compile-static, so (like pr@spmv) each parameterization owns
+        a per-key jit wrapper in the bounded executable cache."""
+        ds = handle.search
+        if ds is None:
+            raise ValueError("knn_search needs a graph prepared with "
+                             "search= (a SearchSpec); this handle has none")
+        ga = handle.arrays
+        p = ds.params
+        padded, valid, real = pad_queries(queries)
+        key = ("knn", ga.num_vertices, ga.num_edges, ds.dim, len(padded),
+               p.k_out, p.beam_width, p.k_return, p.max_steps)
+        fn = self._cache_get(key, lambda: jax.jit(functools.partial(
+            K.knn_search_multi, k_out=p.k_out, beam_width=p.beam_width,
+            k_return=p.k_return, max_steps=p.max_steps)))
+        self._counters["queries"].inc()
+        self._counters["dispatches"].inc()
+        self._counters["sources"].inc(real)
+        ids, visits = fn(ga, ds.vectors, ds.canon, jnp.int32(ds.entry),
+                         jnp.asarray(padded), jnp.asarray(valid))
+        with self._span("device_sync", kernel="knn"):
+            ids = jax.block_until_ready(ids)
+        return ids[:real], visits[:handle.num_vertices]
+
     def run(self, handle: GraphHandle, kernel: str,
             sources=None) -> jnp.ndarray:
+        if kernel in VECTOR_SOURCE:
+            # knn returns (ids, visits), already sliced to real shapes
+            return self._run_knn(handle, sources)
         if kernel == "pr" and handle.spmv is not None:
             out = self._run_pr_spmv(handle)
         else:
@@ -511,7 +582,8 @@ class _ShardedGraphState:
     def __init__(self, graph: Graph, mesh, axis: str,
                  canonical_ids: np.ndarray | None,
                  hot_prefix_fraction: float | None, cold_every: int,
-                 stats, fused: bool = True):
+                 stats, fused: bool = True,
+                 search: SearchSpec | None = None):
         self.graph = graph
         self.mesh = mesh
         self.axis = axis
@@ -521,6 +593,12 @@ class _ShardedGraphState:
         self.stats = stats
         self.fused = fused
         self._runners: dict[str, object] = {}
+        # knn (query-parallel GSPMD) state: the host SearchSpec, the
+        # replicated device operands (built lazily on first knn run),
+        # and per-batch-shape jit wrappers
+        self.search = search
+        self.knn_operands: tuple | None = None
+        self.knn_fns: dict[tuple, object] = {}
 
     def runner(self, kernel: str):
         kernel = _RUNNER_ALIASES.get(kernel, kernel)
@@ -598,12 +676,13 @@ class ShardedBackend:
 
     def prepare(self, graph: Graph,
                 canonical_ids: np.ndarray | None = None,
-                hot_prefix_fraction: float | None = None) -> GraphHandle:
+                hot_prefix_fraction: float | None = None,
+                search: SearchSpec | None = None) -> GraphHandle:
         n, e = graph.num_vertices, graph.num_edges
         state = _ShardedGraphState(graph, self.mesh, self.axis,
                                    canonical_ids, hot_prefix_fraction,
                                    self.cold_every, self.exchange_stats,
-                                   fused=self.fused)
+                                   fused=self.fused, search=search)
         self._counters["prepared"].inc()
         return GraphHandle(self.name, n, e, (n, e),
                            self._per_device_bytes(graph),
@@ -626,9 +705,60 @@ class ShardedBackend:
         emax = int(counts.max()) if len(counts) else 0
         return emax * (4 + 4 + 1 + 4) + per * 4
 
+    def _run_knn(self, handle: GraphHandle, queries) -> tuple:
+        """Query-parallel knn through GSPMD: queries are row-sharded over
+        ``mesh[axis]``, the CSR arrays / vector corpus / canonical-id map
+        replicated, and the same jitted kernel the single-device path
+        compiles partitions its ``vmap`` across devices — each shard
+        beam-searches its query rows and the visit-count reduction over
+        lanes lowers to one psum. No per-step exchange (the graph is
+        replicated), so ``last_run_exchange`` stays None for knn runs;
+        bit-identity with the single path holds because every lane runs
+        the identical per-query program on identical operands."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        st = handle.shard_state
+        sp = st.search
+        if sp is None:
+            raise ValueError("knn_search needs a graph prepared with "
+                             "search= (a SearchSpec); this handle has none")
+        replicated = NamedSharding(self.mesh, PartitionSpec())
+        if st.knn_operands is None:
+            ga = to_device(st.graph, canonical_ids=st.canonical_ids)
+            st.knn_operands = (
+                jax.device_put(ga, replicated),
+                jax.device_put(jnp.asarray(sp.vectors, jnp.float32),
+                               replicated),
+                jax.device_put(jnp.asarray(sp.canon, jnp.int32), replicated),
+            )
+        ga, vecs, canon = st.knn_operands
+        padded, valid, real = pad_queries(queries, multiple=self.num_shards)
+        q = jax.device_put(
+            jnp.asarray(padded),
+            NamedSharding(self.mesh, PartitionSpec(self.axis, None)))
+        vmask = jax.device_put(
+            jnp.asarray(valid),
+            NamedSharding(self.mesh, PartitionSpec(self.axis)))
+        p = sp.params
+        key = (len(padded), p.k_out, p.beam_width, p.k_return, p.max_steps)
+        fn = st.knn_fns.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                K.knn_search_multi, k_out=p.k_out, beam_width=p.beam_width,
+                k_return=p.k_return, max_steps=p.max_steps))
+            st.knn_fns[key] = fn
+        self._counters["queries"].inc()
+        self._counters["dispatches"].inc()
+        self._counters["sources"].inc(real)
+        ids, visits = jax.block_until_ready(
+            fn(ga, vecs, canon, jnp.int32(int(sp.entry)), q, vmask))
+        self.last_run_exchange = None
+        return ids[:real], visits[:handle.num_vertices]
+
     def run(self, handle: GraphHandle, kernel: str,
             sources=None) -> jnp.ndarray:
         build_kernel(kernel)  # unknown kernel: raise before anything counts
+        if kernel in VECTOR_SOURCE:
+            return self._run_knn(handle, sources)
         canon = _RUNNER_ALIASES.get(kernel, kernel)
         new_runner = canon not in handle.shard_state._runners
         runner = handle.shard_state.runner(kernel)

@@ -30,12 +30,15 @@ import pathlib
 
 # Prior relative strength of each scheme at converting skew into miss
 # reduction, calibrated against benchmarks/speedups.py geomeans
-# (original = 0 by construction: it moves nothing).
+# (original = 0 by construction: it moves nothing). "visitsort" is the
+# search-family telemetry packing (search/serve.py) — hubsort over
+# observed visits; its prior sits at hubsort-like strength.
 DEFAULT_PRIORS = {
     "original": 0.0,
     "hubcluster": 0.35,
     "dbg": 0.5,
     "lorder": 0.75,
+    "visitsort": 0.5,
 }
 
 
@@ -75,12 +78,29 @@ class StrengthCalibrator:
             priors = DEFAULT_PRIORS
         self._stats = {scheme: SchemeStats(prior)
                        for scheme, prior in priors.items()}
+        # calibration v2: per-(family, scheme) sufficient statistics.
+        # Faldu et al.'s point — payoff is modulated by graph family —
+        # applies *within* the fitted model too: a scheme's realized
+        # strength on search graphs (visit-skewed, fixed degree) need not
+        # match its strength on analytics graphs. Family fits shrink
+        # toward the *global* fit (not the static prior), so a family
+        # with no observations inherits everything the global pool knows.
+        self._family_stats: dict[tuple[str, str], SchemeStats] = {}
 
     # ----------------------------------------------------------- observe
-    def observe(self, scheme: str, skew: float, realized_gain: float) -> None:
+    def observe(self, scheme: str, skew: float, realized_gain: float,
+                family: str | None = None) -> None:
         if scheme not in self._stats:
             self._stats[scheme] = SchemeStats(prior=0.0)
         self._stats[scheme].observe(float(skew), float(realized_gain))
+        if family is not None:
+            key = (str(family), scheme)
+            if key not in self._family_stats:
+                # prior field unused for family stats: fitted() shrinks
+                # toward the live global fit instead (see strength())
+                self._family_stats[key] = SchemeStats(prior=0.0)
+            self._family_stats[key].observe(float(skew),
+                                            float(realized_gain))
 
     def observe_record(self, record) -> bool:
         """Feed one ``PolicyRecord``; returns whether it was usable.
@@ -91,19 +111,41 @@ class StrengthCalibrator:
         decision = record.decision
         if decision.scheme == "original" or record.miss_rate_before <= 0:
             return False
-        self.observe(decision.scheme, decision.skew, record.realized_gain)
+        self.observe(decision.scheme, decision.skew, record.realized_gain,
+                     family=getattr(record, "family", None))
         return True
 
     # ------------------------------------------------------------- query
-    def strength(self, scheme: str) -> float:
+    def strength(self, scheme: str, family: str | None = None) -> float:
         stats = self._stats.get(scheme)
         if stats is None:
             return 0.0
         if scheme == "original":
             return 0.0
-        return stats.fitted(self.shrinkage)
+        global_fit = stats.fitted(self.shrinkage)
+        if family is None:
+            return global_fit
+        fs = self._family_stats.get((str(family), scheme))
+        if fs is None:
+            return global_fit
+        # family ridge shrunk toward the *leave-this-family-out* fit:
+        # the family's own samples must not appear in its shrinkage
+        # target too, or a family holding all the evidence gets shrunk
+        # twice. With one family in play this reduces exactly to the
+        # global fit; evidence from *other* families moves the target.
+        other_ss = max(stats.sum_ss - fs.sum_ss, 0.0)
+        other_sg = stats.sum_sg - fs.sum_sg
+        prior_fit = ((other_sg + self.shrinkage * stats.prior)
+                     / (other_ss + self.shrinkage))
+        prior_fit = min(max(prior_fit, 0.0), 1.0)
+        est = ((fs.sum_sg + self.shrinkage * prior_fit)
+               / (fs.sum_ss + self.shrinkage))
+        return min(max(est, 0.0), 1.0)
 
-    def count(self, scheme: str) -> int:
+    def count(self, scheme: str, family: str | None = None) -> int:
+        if family is not None:
+            fs = self._family_stats.get((str(family), scheme))
+            return fs.count if fs else 0
         stats = self._stats.get(scheme)
         return stats.count if stats else 0
 
@@ -118,6 +160,12 @@ class StrengthCalibrator:
                     "count": st.count, "sum_ss": st.sum_ss,
                     "sum_sg": st.sum_sg}
                 for s, st in self._stats.items()
+            },
+            "families": {
+                f"{fam}/{s}": {"fitted": self.strength(s, family=fam),
+                               "count": st.count, "sum_ss": st.sum_ss,
+                               "sum_sg": st.sum_sg}
+                for (fam, s), st in self._family_stats.items()
             },
         }
 
@@ -136,5 +184,11 @@ class StrengthCalibrator:
         for scheme, st in blob["schemes"].items():
             cal._stats[scheme] = SchemeStats(
                 prior=st["prior"], count=st["count"],
+                sum_ss=st["sum_ss"], sum_sg=st["sum_sg"])
+        # "families" is absent in pre-v2 saves — loads as global-only
+        for key, st in blob.get("families", {}).items():
+            fam, scheme = key.split("/", 1)
+            cal._family_stats[(fam, scheme)] = SchemeStats(
+                prior=0.0, count=st["count"],
                 sum_ss=st["sum_ss"], sum_sg=st["sum_sg"])
         return cal

@@ -32,9 +32,9 @@ import jax.numpy as jnp
 
 from ..algos.graph_arrays import GraphArrays
 from ..core.csr import Graph
-from .backends import (GLOBAL, MULTI_SOURCE, ExecutionBackend, GraphHandle,
-                       ShardedBackend, SingleDeviceBackend, build_kernel,
-                       source_bucket)
+from .backends import (GLOBAL, MULTI_SOURCE, VECTOR_SOURCE, ExecutionBackend,
+                       GraphHandle, ShardedBackend, SingleDeviceBackend,
+                       build_kernel, source_bucket)
 
 # Backwards-compatible aliases: PR 1 exposed these names here.
 _build = build_kernel
@@ -94,18 +94,22 @@ class BatchedExecutor:
     # -------------------------------------------------------------- prepare
     def prepare(self, graph: Graph, backend: str = "single",
                 canonical_ids=None,
-                hot_prefix_fraction: float | None = None) -> GraphHandle:
+                hot_prefix_fraction: float | None = None,
+                search=None) -> GraphHandle:
         """Upload one graph through the named backend; returns its handle.
 
         ``hot_prefix_fraction`` only applies to the sharded backend (the
         single-device path has no per-step exchange to thin out).
+        ``search`` (a `repro.search.SearchSpec`) attaches the served-order
+        vector corpus that makes the handle servable by ``knn_search``.
         """
         if backend == "sharded":
             return self.sharded.prepare(
                 graph, canonical_ids=canonical_ids,
-                hot_prefix_fraction=hot_prefix_fraction)
+                hot_prefix_fraction=hot_prefix_fraction, search=search)
         return self.backend(backend).prepare(graph,
-                                             canonical_ids=canonical_ids)
+                                             canonical_ids=canonical_ids,
+                                             search=search)
 
     # ------------------------------------------------------------------ run
     def run(self, target, kernel: str, sources=None) -> jnp.ndarray:
@@ -155,5 +159,5 @@ class BatchedExecutor:
         }
 
 
-__all__ = ["GLOBAL", "MULTI_SOURCE", "BatchedExecutor", "GraphHandle",
-           "ShardedBackend", "SingleDeviceBackend"]
+__all__ = ["GLOBAL", "MULTI_SOURCE", "VECTOR_SOURCE", "BatchedExecutor",
+           "GraphHandle", "ShardedBackend", "SingleDeviceBackend"]

@@ -41,7 +41,7 @@ _SCHEME_STRENGTH = DEFAULT_PRIORS
 
 @dataclasses.dataclass(frozen=True)
 class PolicyDecision:
-    scheme: str              # key into reordering_registry()
+    scheme: str              # key into reordering_registry(), or "visitsort"
     kwargs: dict             # scheme arguments (e.g. probe-derived kappa)
     reason: str              # human-readable rule that fired
     predicted_gain: float    # predicted fractional miss-rate reduction
@@ -50,6 +50,11 @@ class PolicyDecision:
     # sharded placement only: fraction of each shard's property slice
     # all-gathered every step (None = full exchange every step)
     hot_prefix_fraction: float | None = None
+    # what "hot" means for this layout: "degree" (structural probes) or
+    # "visits" (serving telemetry, the search-family signal) — determines
+    # which skew axis the prediction used and how the hot prefix is kept
+    # fresh (session.refresh_hotness patches by visit mask)
+    hotness_source: str = "degree"
 
 
 def decision_changed(old: PolicyDecision | None,
@@ -57,14 +62,16 @@ def decision_changed(old: PolicyDecision | None,
     """Whether a fresh decision is materially different from the applied
     one — i.e. whether a mutation warrants an async full reorder. Reasons
     and predicted gains differ on every re-decide; what matters is the
-    layout recipe: scheme, its kwargs, placement, and exchange fraction.
+    layout recipe: scheme, its kwargs, placement, exchange fraction, and
+    which hotness axis the layout is ordered by.
     """
     if old is None or new is None:
         return old is not new
     return (old.scheme != new.scheme
             or old.kwargs != new.kwargs
             or old.backend != new.backend
-            or old.hot_prefix_fraction != new.hot_prefix_fraction)
+            or old.hot_prefix_fraction != new.hot_prefix_fraction
+            or old.hotness_source != new.hotness_source)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +133,7 @@ class PolicyRecord:
     miss_rate_before: float
     miss_rate_after: float
     reorder_seconds: float
+    family: str = "analytics"   # graph family the outcome belongs to
 
     @property
     def realized_gain(self) -> float:
@@ -140,6 +148,7 @@ class PolicyRecord:
     def as_dict(self) -> dict:
         return {
             "graph_id": self.graph_id,
+            "family": self.family,
             "scheme": self.decision.scheme,
             "backend": self.decision.backend,
             "hot_prefix_fraction": self.decision.hot_prefix_fraction,
@@ -199,10 +208,19 @@ class ReorderPolicy:
         """Probe composite: how much hot working set there is to pack."""
         return min(probes.degree_gini * (0.5 + probes.hub_mass), 1.0)
 
+    @staticmethod
+    def _visit_skew(probes: GraphProbes) -> float:
+        """The same composite over observed visit frequency — the skew
+        axis for search graphs, whose fixed out-degree makes the degree
+        composite read ~0 (docs/search.md)."""
+        return min(probes.visit_gini * (0.5 + probes.visit_hub_mass), 1.0)
+
     def _predict_gain(self, probes: GraphProbes, scheme: str) -> float:
-        """Payoff model: skew x fitted scheme strength."""
-        return round(self._skew(probes) * self.calibrator.strength(scheme),
-                     4)
+        """Payoff model: skew x fitted scheme strength (family-keyed)."""
+        skew = (self._visit_skew(probes) if scheme == "visitsort"
+                else self._skew(probes))
+        return round(skew * self.calibrator.strength(
+            scheme, family=probes.family), 4)
 
     def _scheme_kwargs(self, scheme: str, probes: GraphProbes) -> dict:
         if scheme == "lorder":
@@ -323,8 +341,44 @@ class ReorderPolicy:
                 f"{self.override_margin}")
         return best, note
 
+    def _decide_search(self, probes: GraphProbes,
+                       expected_queries: int) -> PolicyDecision:
+        """Search-family tree: degree probes are blind here (fixed
+        out-degree), so the only skew worth packing is *observed* visit
+        frequency — populated by `GraphRegistry.note_visits` as knn
+        traffic flows and refreshed via ``refresh_visit_probes``. Until
+        telemetry shows skew, serve the original layout."""
+        if expected_queries < self.min_queries:
+            scheme, source = "original", "degree"
+            reason = (f"volume gate: {expected_queries} expected queries "
+                      f"< {self.min_queries}, reorder cannot amortize")
+        elif probes.visit_gini < self.min_gini:
+            scheme, source = "original", "degree"
+            reason = (f"search skew gate: visit gini "
+                      f"{probes.visit_gini:.3f} < {self.min_gini} — no "
+                      f"observed hot set to pack (degree gini "
+                      f"{probes.degree_gini:.3f} is structurally "
+                      f"uninformative on fixed out-degree graphs)")
+        else:
+            scheme, source = "visitsort", "visits"
+            reason = (f"search family: observed visit gini "
+                      f"{probes.visit_gini:.3f} >= {self.min_gini} with "
+                      f"{probes.visit_hub_mass:.1%} of visits on "
+                      f"{probes.visit_hub_fraction:.1%} of vertices — "
+                      f"packing the hot prefix by visit telemetry")
+        backend, placement_note = self._placement(probes)
+        if placement_note:
+            reason = f"{reason}; {placement_note}"
+        skew = (self._visit_skew(probes) if source == "visits"
+                else self._skew(probes))
+        return PolicyDecision(scheme, {}, reason,
+                              self._predict_gain(probes, scheme),
+                              skew, backend, None, hotness_source=source)
+
     def decide(self, probes: GraphProbes,
                expected_queries: int) -> PolicyDecision:
+        if probes.family == "search":
+            return self._decide_search(probes, expected_queries)
         candidates: list[str] = []
         if expected_queries < self.min_queries:
             scheme = "original"
@@ -373,17 +427,30 @@ class ReorderPolicy:
                               self._skew(probes), backend, hot_prefix)
 
     # -------------------------------------------------------------- apply
-    def reorder_fn(self, decision: PolicyDecision):
-        """Resolve the decision to a callable(graph) -> perm."""
+    def reorder_fn(self, decision: PolicyDecision, visits=None):
+        """Resolve the decision to a callable(graph) -> perm.
+
+        ``visits`` carries the observed per-vertex visit EWMA (original-id
+        space) that the ``visitsort`` scheme orders by — it is serving
+        telemetry, not graph structure, so it rides in from the session
+        rather than the registry of structural schemes.
+        """
+        if decision.scheme == "visitsort":
+            if visits is None:
+                raise ValueError(
+                    "visitsort orders by observed visits; pass visits=")
+            from ..search.serve import visit_order
+            return lambda g: visit_order(visits)
         fn = reordering_registry()[decision.scheme]
         return lambda g: fn(g, **decision.kwargs)
 
     def record(self, graph_id: str, decision: PolicyDecision,
                miss_rate_before: float, miss_rate_after: float,
-               reorder_seconds: float) -> PolicyRecord:
+               reorder_seconds: float,
+               family: str = "analytics") -> PolicyRecord:
         """Log an outcome and feed it to the calibrator (the closed loop)."""
         rec = PolicyRecord(graph_id, decision, miss_rate_before,
-                           miss_rate_after, reorder_seconds)
+                           miss_rate_after, reorder_seconds, family=family)
         self.history.append(rec)
         self.calibrator.observe_record(rec)
         return rec

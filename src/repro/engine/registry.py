@@ -28,7 +28,14 @@ from ..core.mutate import MutationDelta
 
 @dataclasses.dataclass(frozen=True)
 class GraphProbes:
-    """Cheap structural summary feeding the reorder policy."""
+    """Cheap structural summary feeding the reorder policy.
+
+    The ``visit_*`` fields mirror the degree probes but over *observed
+    visit frequency* (EWMA, ``GraphRegistry.note_visits``) — the skew
+    signal for search graphs, whose out-degree is fixed by construction
+    so degree probes read as uniform (Coleman et al., docs/search.md).
+    They stay 0 until serving telemetry arrives.
+    """
 
     num_vertices: int
     num_edges: int
@@ -38,6 +45,10 @@ class GraphProbes:
     hub_mass: float       # fraction of total degree held by hub vertices
     diameter: int         # double-sweep BFS lower bound
     probe_seconds: float
+    family: str = "analytics"    # workload family: "analytics" | "search"
+    visit_gini: float = 0.0      # Gini of EWMA visit counts
+    visit_hub_fraction: float = 0.0  # fraction with above-mean visits
+    visit_hub_mass: float = 0.0      # visit mass held by that hot set
 
 
 def degree_gini(degrees: np.ndarray) -> float:
@@ -95,7 +106,7 @@ def hub_stats_from_histogram(hist: np.ndarray) -> tuple[float, float, float]:
     return float(lam), hub_fraction, hub_mass
 
 
-def probe_graph(g: Graph) -> GraphProbes:
+def probe_graph(g: Graph, family: str = "analytics") -> GraphProbes:
     """Compute all policy probes in one pass over degrees + two BFS."""
     t0 = time.perf_counter()
     deg = g.degree
@@ -110,6 +121,7 @@ def probe_graph(g: Graph) -> GraphProbes:
         hub_mass=float(deg[hot].sum() / total) if total else 0.0,
         diameter=two_sweep_diameter(g),
         probe_seconds=time.perf_counter() - t0,
+        family=family,
     )
 
 
@@ -152,6 +164,13 @@ class GraphEntry:
     # accumulated |delta| / E since the last full probe_graph; past the
     # session's drift threshold the next mutation pays a full re-probe
     probe_drift: float = 0.0
+    # --- search-graph state (search/, knn_search) ----------------------
+    vectors: np.ndarray | None = None      # (V, d) float32, original order
+    search_params: object | None = None    # search.serve.SearchParams
+    entry_point: int = 0                   # entry vertex, original id
+    visit_ewma: np.ndarray | None = None   # (V,) EWMA visits, original ids
+    visits_total: int = 0                  # raw visit-count sum observed
+    visit_queries: int = 0                 # queries behind visit_ewma
 
 
 class GraphRegistry:
@@ -161,7 +180,8 @@ class GraphRegistry:
         self._entries: dict[str, GraphEntry] = {}
 
     def add(self, graph: Graph, graph_id: str | None = None,
-            expected_queries: int = 64) -> GraphEntry:
+            expected_queries: int = 64,
+            family: str = "analytics") -> GraphEntry:
         if graph_id is not None and not graph_id:
             # an explicit empty id must not silently alias to graph.name
             raise ValueError("graph_id must be a non-empty string")
@@ -171,7 +191,8 @@ class GraphRegistry:
                 "graph has an empty name; pass an explicit graph_id")
         if gid in self._entries:
             raise KeyError(f"graph id {gid!r} already registered")
-        entry = GraphEntry(gid, graph, probe_graph(graph), expected_queries)
+        entry = GraphEntry(gid, graph, probe_graph(graph, family=family),
+                           expected_queries)
         entry.degree_hist = degree_histogram(graph.degree)
         self._entries[gid] = entry
         return entry
@@ -192,19 +213,31 @@ class GraphRegistry:
         """
         entry = self._entries[graph_id]
         old_degrees = entry.graph.degree  # cached; pre-mutation values
+        n_old = len(old_degrees)
         t0 = time.perf_counter()
         entry.graph = new_graph
         entry.mutations += 1
         entry.probe_drift += delta.edges_changed / max(entry.probes.num_edges, 1)
         if entry.degree_hist is None or entry.probe_drift > drift_threshold:
-            entry.probes = probe_graph(new_graph)
+            entry.probes = probe_graph(new_graph,
+                                       family=entry.probes.family)
             entry.degree_hist = degree_histogram(new_graph.degree)
             entry.probe_drift = 0.0
             return "full"
 
         hist = entry.degree_hist
         changed = delta.changed_vertices
-        old_d = old_degrees[changed].astype(np.int64)
+        # vertices added by this delta enter the multiset at degree 0
+        # before their edge endpoints are applied; ids >= the old vertex
+        # count must read old degree 0, not index out of the old array
+        if delta.vertices_added:
+            hist = hist.copy()
+            hist[0] += delta.vertices_added
+            old_d = np.where(changed < n_old,
+                             old_degrees[np.minimum(changed, n_old - 1)],
+                             0).astype(np.int64)
+        else:
+            old_d = old_degrees[changed].astype(np.int64)
         new_d = old_d + delta.degree_delta
         max_d = int(new_d.max()) if len(new_d) else 0
         if max_d >= len(hist):
@@ -216,6 +249,7 @@ class GraphRegistry:
         lam, hub_fraction, hub_mass = hub_stats_from_histogram(hist)
         entry.probes = dataclasses.replace(
             entry.probes,
+            num_vertices=new_graph.num_vertices,
             num_edges=new_graph.num_edges,
             avg_degree=lam,
             degree_gini=gini_from_histogram(hist),
@@ -234,6 +268,45 @@ class GraphRegistry:
         entry = self._entries[graph_id]
         entry.queries_observed += n
         return entry.queries_observed
+
+    def note_visits(self, graph_id: str, visits: np.ndarray,
+                    num_queries: int = 1, alpha: float = 0.3) -> np.ndarray:
+        """Fold one launch's per-vertex visit counts (original-id space)
+        into the entry's EWMA hotness estimate.
+
+        The estimate tracks *visits per query* so batch size doesn't
+        scale it; ``alpha`` is the EWMA smoothing weight on the newest
+        batch. Returns the updated EWMA array.
+        """
+        entry = self._entries[graph_id]
+        rate = np.asarray(visits, dtype=np.float64) / max(num_queries, 1)
+        if entry.visit_ewma is None or len(entry.visit_ewma) != len(rate):
+            # first telemetry, or the vertex set grew (update_graph
+            # add_vertices=): start fresh at the observed rate
+            entry.visit_ewma = rate.copy()
+        else:
+            entry.visit_ewma += alpha * (rate - entry.visit_ewma)
+        entry.visits_total += int(np.asarray(visits).sum())
+        entry.visit_queries += num_queries
+        return entry.visit_ewma
+
+    def refresh_visit_probes(self, graph_id: str) -> GraphProbes:
+        """Recompute the visit-skew probe fields from the current EWMA
+        (the search-family analogue of the degree probes); returns the
+        refreshed probes. No-op (returns current) without telemetry."""
+        entry = self._entries[graph_id]
+        v = entry.visit_ewma
+        if v is None or v.sum() <= 0:
+            return entry.probes
+        hot = v > v.mean()
+        total = float(v.sum())
+        entry.probes = dataclasses.replace(
+            entry.probes,
+            visit_gini=degree_gini(v),
+            visit_hub_fraction=float(hot.mean()),
+            visit_hub_mass=float(v[hot].sum() / total),
+        )
+        return entry.probes
 
     def ids(self) -> list[str]:
         return list(self._entries)

@@ -88,7 +88,9 @@ from typing import TYPE_CHECKING
 
 import numpy as np
 
-from .backends import GLOBAL, MULTI_SOURCE, build_kernel, source_bucket
+from ..search.serve import query_digest
+from .backends import (GLOBAL, MULTI_SOURCE, VECTOR_SOURCE, build_kernel,
+                       source_bucket)
 from .obs import REQUEST_TID_BASE, RateWindow, signed_log_boundaries
 from .result_cache import GLOBAL_SOURCE
 
@@ -154,7 +156,9 @@ class Request:
     seq: int                       # FIFO tiebreak, assigned at enqueue
     graph_id: str
     kernel: str
-    sources: np.ndarray | None     # original-id space; None for GLOBAL
+    # original-id space for MULTI_SOURCE; (S, d) float32 query rows for
+    # VECTOR_SOURCE (a knn "source" is a vector); None for GLOBAL
+    sources: np.ndarray | None
     priority: int                  # higher drains first
     deadline: float | None         # absolute perf_counter() time, or None
     enqueued_at: float
@@ -165,7 +169,12 @@ class Request:
 
     @property
     def num_sources(self) -> int:
-        return 0 if self.sources is None else int(self.sources.size)
+        if self.sources is None:
+            return 0
+        # a 2-D source batch is S query *rows*, not S x d scalars
+        if self.sources.ndim == 2:
+            return int(len(self.sources))
+        return int(self.sources.size)
 
     def order_key(self) -> tuple:
         """Drain order: priority desc, earliest deadline, FIFO."""
@@ -394,6 +403,20 @@ class MicroBatchScheduler:
                 raise ValueError(
                     f"{kernel} sources must be in [0, {n}); got "
                     f"[{int(srcs.min())}, {int(srcs.max())}]")
+        elif kernel in VECTOR_SOURCE:
+            if entry.vectors is None:
+                raise ValueError(
+                    f"graph {graph_id!r} was registered without vectors=; "
+                    f"{kernel} queries need a vector corpus")
+            srcs = np.atleast_2d(np.asarray(sources, dtype=np.float32))
+            if srcs.size == 0:
+                raise ValueError(f"{kernel} needs at least one query vector")
+            dim = int(entry.vectors.shape[1])
+            if srcs.ndim != 2 or srcs.shape[1] != dim:
+                raise ValueError(
+                    f"{kernel} queries must be (S, {dim}) float32 rows "
+                    f"matching the registered corpus, got shape "
+                    f"{srcs.shape}")
         with self._lock:
             priority, deadline_seconds, degraded = self._admit(
                 graph_id, kernel, priority, deadline_seconds)
@@ -684,6 +707,17 @@ class MicroBatchScheduler:
             chunks.append(cur)
         return chunks
 
+    @staticmethod
+    def _source_items(kernel: str, req: Request) -> list[tuple[int, object]]:
+        """Per-source ``(cache_key, launch_payload)`` pairs for one
+        request. Integer sources key as themselves; a knn query row keys
+        as its content digest (`search.serve.query_digest`) — what makes
+        float vectors addressable by the result cache — and its payload
+        is the row itself."""
+        if kernel in VECTOR_SOURCE:
+            return [(query_digest(row), row) for row in req.sources]
+        return [(int(s), int(s)) for s in req.sources]
+
     def _serve_multi(self, entry, kernel: str, reqs: list[Request]) -> None:
         """One vmapped launch for the chunk's *uncached* sources; cached
         rows come from the result cache (within-window dedup falls out of
@@ -694,26 +728,32 @@ class MicroBatchScheduler:
         if cache is None:
             self._serve_multi_uncached(entry, kernel, reqs, launch_begin)
             return
+        is_vec = kernel in VECTOR_SOURCE
         gid, gen = entry.graph_id, entry.generation
-        rows: dict[int, np.ndarray] = {}       # source -> result row
-        missing: list[int] = []                # fresh sources, first-seen
+        req_items = [self._source_items(kernel, r) for r in reqs]
+        rows: dict[int, np.ndarray] = {}       # cache key -> result row
+        missing: list = []                     # fresh payloads, first-seen
+        missing_keys: list[int] = []
         missing_set: set[int] = set()
-        for r in reqs:
-            for s in map(int, r.sources):
-                if s in rows or s in missing_set:
+        for items in req_items:
+            for key, payload in items:
+                if key in rows or key in missing_set:
                     continue
-                row = cache.get(gid, gen, kernel, s)
+                row = cache.get(gid, gen, kernel, key)
                 if row is None:
-                    missing.append(s)
-                    missing_set.add(s)
+                    missing.append(payload)
+                    missing_keys.append(key)
+                    missing_set.add(key)
                 else:
-                    rows[s] = row
+                    rows[key] = row
         wall, exchange = 0.0, None
         if missing:
             with session.tracer.span("coalesce", graph_id=gid, kernel=kernel,
                                      requests=len(reqs),
                                      cached_sources=len(rows)):
-                launch_sources = np.asarray(missing, dtype=np.int64)
+                launch_sources = (np.stack(missing).astype(np.float32)
+                                  if is_vec
+                                  else np.asarray(missing, dtype=np.int64))
             try:
                 out, wall = session._launch(entry, kernel, launch_sources)
             except Exception as exc:
@@ -723,13 +763,16 @@ class MicroBatchScheduler:
             session.policy.observe_batch_sources(len(missing))
             self._c_launches.inc()
             hot = entry.hot_prefix_len
-            for i, s in enumerate(missing):
+            for i, key in enumerate(missing_keys):
                 # copy: a slice view would pin the whole (S, V) launch
                 # array for as long as any one cached row is retained
                 row = out[i].copy()
-                rows[s] = row
-                cache.put(gid, gen, kernel, s, row,
-                          pinned=hot > 0 and int(entry.perm[s]) < hot)
+                rows[key] = row
+                # knn rows are keyed by content digest, not vertex id, so
+                # GRASP pinning (a vertex-prefix rule) never applies
+                pinned = (not is_vec and hot > 0
+                          and int(entry.perm[key]) < hot)
+                cache.put(gid, gen, kernel, key, row, pinned=pinned)
         else:
             # every row came from memory — the whole chunk serves with no
             # device work at all; make that visible on the engine track
@@ -741,13 +784,13 @@ class MicroBatchScheduler:
             self._c_coalesced.inc(len(reqs))
         # launch wall is shared pro-rata over freshly launched rows only:
         # a fully cached request costs (and is charged) ~nothing
-        fresh = [sum(1 for s in map(int, r.sources) if s in missing_set)
-                 for r in reqs]
+        fresh = [sum(1 for key, _ in items if key in missing_set)
+                 for items in req_items]
         fresh_total = sum(fresh) or 1
         with session.tracer.span("slice_out", graph_id=gid, kernel=kernel,
                                  requests=len(reqs)):
-            for r, n_fresh in zip(reqs, fresh):
-                out_rows = np.stack([rows[int(s)] for s in r.sources])
+            for r, items, n_fresh in zip(reqs, req_items, fresh):
+                out_rows = np.stack([rows[key] for key, _ in items])
                 self._account(entry, r, out_rows, wall,
                               wall * (n_fresh / fresh_total), len(reqs),
                               len(missing), exchange, launch_begin,
@@ -768,7 +811,7 @@ class MicroBatchScheduler:
             self._fail_launch(reqs, exc)
             raise
         exchange = session._last_exchange(entry)
-        total = int(all_sources.size)
+        total = int(len(all_sources))   # rows for (S, d) vector batches
         session.policy.observe_batch_sources(total)
         self._c_launches.inc()
         if len(reqs) > 1:

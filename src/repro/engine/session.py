@@ -48,7 +48,9 @@ from ..cache.sim import estimate_miss_rate, scaled_config
 from ..core.csr import Graph
 from ..core.mutate import apply_edge_delta
 from ..core.patch_reorder import patch_permutation
-from .executor import MULTI_SOURCE, BatchedExecutor
+from ..search.knn_graph import medoid_entry, validate_search_graph
+from ..search.serve import SearchParams, SearchSpec, visit_hot_mask
+from .executor import MULTI_SOURCE, VECTOR_SOURCE, BatchedExecutor
 from .obs import Clock, MetricsRegistry, ProfilerHook, Tracer
 from .policy import (AdmissionPolicy, PolicyDecision, ReorderPolicy,
                      decision_changed)
@@ -163,6 +165,8 @@ class EngineSession:
                  admission: AdmissionPolicy | None = None,
                  result_cache: "ResultCache | bool" = True,
                  result_cache_entries: int = 4096,
+                 result_cache_max_age_s: float | None = None,
+                 result_cache_max_bytes: int | None = None,
                  clock: Clock | None = None,
                  tracer: Tracer | None = None,
                  profiler_dir: str | None = None,
@@ -225,7 +229,10 @@ class EngineSession:
             self.result_cache: ResultCache | None = result_cache
         elif result_cache:
             self.result_cache = ResultCache(max_entries=result_cache_entries,
-                                            registry=m)
+                                            registry=m,
+                                            max_age_s=result_cache_max_age_s,
+                                            max_bytes=result_cache_max_bytes,
+                                            clock=self.clock.now)
         else:
             self.result_cache = None
         self.scheduler = MicroBatchScheduler(
@@ -269,14 +276,68 @@ class EngineSession:
 
     # ----------------------------------------------------------- register
     def register(self, graph: Graph, graph_id: str | None = None,
-                 expected_queries: int = 64) -> str:
+                 expected_queries: int = 64, vectors=None,
+                 search_params: SearchParams | None = None) -> str:
+        """Register a graph for serving; returns its id.
+
+        Passing ``vectors`` (one float32 row per vertex) registers the
+        graph as a **search graph** (``family="search"``): the graph must
+        be a valid fixed-out-degree k-NN graph (`search.knn_graph`), the
+        ``knn`` kernel becomes enqueueable against it, and the policy
+        decides from *visit* telemetry rather than degree skew (degrees
+        are uniform by construction — docs/search.md). ``search_params``
+        defaults to ``SearchParams(k_out=<graph degree>)``; its ``k_out``
+        must match the graph's fixed out-degree.
+        """
+        family = "analytics"
+        if vectors is not None:
+            vecs = np.ascontiguousarray(vectors, dtype=np.float32)
+            if vecs.ndim != 2 or len(vecs) != graph.num_vertices:
+                raise ValueError(
+                    f"vectors must be ({graph.num_vertices}, d); got "
+                    f"shape {vecs.shape}")
+            k_out = validate_search_graph(graph)
+            if search_params is None:
+                search_params = SearchParams(k_out=k_out)
+            elif search_params.k_out != k_out:
+                raise ValueError(
+                    f"search_params.k_out={search_params.k_out} but the "
+                    f"graph's fixed out-degree is {k_out}")
+            family = "search"
+        elif search_params is not None:
+            raise ValueError("search_params requires vectors=")
         with self.tracer.span("register", graph_id=graph_id or graph.name):
             with self.tracer.span("probe", graph_id=graph_id or graph.name):
-                entry = self.registry.add(graph, graph_id, expected_queries)
+                entry = self.registry.add(graph, graph_id, expected_queries,
+                                          family=family)
+            if family == "search":
+                entry.vectors = vecs
+                entry.search_params = search_params
+                entry.entry_point = medoid_entry(vecs)
             decision = self.policy.decide(entry.probes, expected_queries)
             self._apply_decision(entry, decision)
         self._c_registered.inc()
         return entry.graph_id
+
+    def _search_spec(self, entry: GraphEntry) -> SearchSpec | None:
+        """Layout-bound SearchSpec for the entry's *current* permutation
+        (None for analytics graphs). Built fresh on every (re)prepare so
+        the served-order vector matrix always matches the layout."""
+        if entry.vectors is None:
+            return None
+        return SearchSpec(
+            vectors=np.ascontiguousarray(entry.vectors[entry.inv_perm]),
+            entry=int(entry.perm[entry.entry_point]),
+            canon=np.asarray(entry.inv_perm, dtype=np.int32),
+            params=entry.search_params)
+
+    def _visits_for(self, entry: GraphEntry) -> np.ndarray | None:
+        """Visit EWMA padded to the current vertex count (update_graph
+        may have grown the vertex set since telemetry last arrived)."""
+        v = entry.visit_ewma
+        if v is not None and len(v) < entry.graph.num_vertices:
+            v = np.pad(v, (0, entry.graph.num_vertices - len(v)))
+        return v
 
     def _apply_decision(self, entry: GraphEntry, decision: PolicyDecision,
                         perm: np.ndarray | None = None,
@@ -304,7 +365,9 @@ class EngineSession:
                                   scheme=decision.scheme,
                                   generation=entry.generation):
                 perm = np.asarray(
-                    self.policy.reorder_fn(decision)(entry.graph))
+                    self.policy.reorder_fn(
+                        decision,
+                        visits=self._visits_for(entry))(entry.graph))
             entry.reorder_seconds = self.clock.now() - t0
         else:
             perm = np.asarray(perm)
@@ -337,20 +400,26 @@ class EngineSession:
                               backend=decision.backend):
             entry.handle = self.executor.prepare(
                 entry.served, backend=decision.backend, canonical_ids=inv,
-                hot_prefix_fraction=decision.hot_prefix_fraction)
+                hot_prefix_fraction=decision.hot_prefix_fraction,
+                search=self._search_spec(entry))
         entry.backend = decision.backend
         entry.bucket_shape = entry.handle.bucket
         entry.hot_prefix_fraction = decision.hot_prefix_fraction
         # locality layouts pack hubs into a low-id prefix; identity/random
-        # layouts have no hot prefix to pin result-cache entries against
+        # layouts have no hot prefix to pin result-cache entries against.
+        # Visit-ordered layouts size the prefix from the *observed* hot
+        # set rather than the (uniform, for search graphs) degree one.
+        hot_frac = (entry.probes.visit_hub_fraction
+                    if decision.hotness_source == "visits"
+                    else entry.probes.hub_fraction)
         entry.hot_prefix_len = (
             0 if decision.scheme in ("original", "random")
-            else int(round(entry.probes.hub_fraction
-                           * entry.graph.num_vertices)))
+            else int(round(hot_frac * entry.graph.num_vertices)))
         entry.arrays = entry.handle.arrays  # None when served sharded
 
         rec = self.policy.record(entry.graph_id, decision, before, after,
-                                 entry.reorder_seconds)
+                                 entry.reorder_seconds,
+                                 family=entry.probes.family)
         entry.ledger = AmortizationLedger(entry.reorder_seconds,
                                           rec.realized_gain,
                                           backend=decision.backend,
@@ -379,7 +448,8 @@ class EngineSession:
 
     # ------------------------------------------------------ dynamic graphs
     def update_graph(self, graph_id: str, add_edges=None, remove_edges=None,
-                     *, reorder: str = "auto") -> dict:
+                     *, reorder: str = "auto", add_vertices: int = 0,
+                     vectors=None) -> dict:
         """Apply an edge delta to a registered graph (the mutation API).
 
         Edges are ``(k, 2)`` original-id pairs; removal is multiset
@@ -404,19 +474,46 @@ class EngineSession:
         - ``"async"`` — patch now, always schedule the async full reorder.
         - ``"full"`` — synchronous full reorder (blocks for LOrder).
 
+        ``add_vertices`` grows the vertex set by that many ids, appended
+        at the top of the original id range (``add_edges`` may reference
+        them). New vertices join the layout as a cold identity tail —
+        the next patch or full reorder places them properly. For search
+        graphs, ``vectors`` must supply the ``(add_vertices, d)`` rows of
+        the new vertices (`search.knn_graph.nsw_insert_deltas` produces
+        both halves of that delta).
+
         Returns a summary dict (tier, probe mode, generation, walls).
         """
         if reorder not in ("auto", "patch", "async", "full"):
             raise ValueError(f"unknown reorder tier {reorder!r}")
         entry = self.registry.get(graph_id)  # KeyError on unknown id
+        new_vecs = None
+        if entry.vectors is not None:
+            d = entry.vectors.shape[1]
+            if (vectors is None) != (add_vertices == 0):
+                raise ValueError(
+                    "search graphs take add_vertices= and vectors= "
+                    "together (one vector row per new vertex)")
+            if vectors is not None:
+                new_vecs = np.ascontiguousarray(vectors, dtype=np.float32)
+                if new_vecs.shape != (int(add_vertices), d):
+                    raise ValueError(
+                        f"vectors must be ({int(add_vertices)}, {d}); "
+                        f"got shape {new_vecs.shape}")
+        elif vectors is not None:
+            raise ValueError("vectors= requires a search graph "
+                             "(registered with vectors=)")
         t0 = self.clock.now()
         with self.scheduler.fence(graph_id):
             with self.tracer.span("mutate", graph_id=graph_id,
                                   tier=reorder):
+                n_old = entry.graph.num_vertices
                 new_graph, delta = apply_edge_delta(
-                    entry.graph, add_edges, remove_edges)
-                if delta.edges_changed == 0:
+                    entry.graph, add_edges, remove_edges,
+                    add_vertices=add_vertices)
+                if delta.edges_changed == 0 and delta.vertices_added == 0:
                     return {"graph_id": graph_id, "added": 0, "removed": 0,
+                            "vertices_added": 0,
                             "tier": "noop", "probe_mode": "none",
                             "generation": entry.generation,
                             "full_reorder_scheduled": False,
@@ -428,6 +525,18 @@ class EngineSession:
                 probe_mode = self.registry.apply_mutation(
                     graph_id, new_graph, delta,
                     drift_threshold=self.probe_drift_threshold)
+                if delta.vertices_added:
+                    # grown ids join the layout as a cold identity tail
+                    # (served ids n_old..n-1); both tiers below rebuild
+                    # the served CSR from this extended permutation
+                    tail = np.arange(n_old, new_graph.num_vertices)
+                    entry.perm = np.concatenate(
+                        [np.asarray(entry.perm, dtype=np.int64), tail])
+                    entry.inv_perm = np.concatenate(
+                        [np.asarray(entry.inv_perm, dtype=np.int64), tail])
+                    if new_vecs is not None:
+                        entry.vectors = np.concatenate(
+                            [entry.vectors, new_vecs])
                 self._c_mutations.inc()
                 self._c_edges_added.inc(delta.added)
                 self._c_edges_removed.inc(delta.removed)
@@ -460,13 +569,15 @@ class EngineSession:
                 tier=tier).observe(wall)
         return {"graph_id": graph_id,
                 "added": delta.added, "removed": delta.removed,
+                "vertices_added": delta.vertices_added,
                 "tier": tier, "probe_mode": probe_mode,
                 "generation": entry.generation,
                 "full_reorder_scheduled": schedule_full,
                 "reorder_seconds": entry.reorder_seconds,
                 "mutate_seconds": wall}
 
-    def _apply_patch(self, entry: GraphEntry) -> None:
+    def _apply_patch(self, entry: GraphEntry,
+                     hot_mask: np.ndarray | None = None) -> None:
         """Incremental patch tier: stable hot-prefix repack + re-upload.
 
         Keeps the current decision; bumps the generation (invalidating
@@ -475,6 +586,8 @@ class EngineSession:
         simulation — and re-uploads/re-buckets the mutated CSR through
         the entry's backend. Identity/random layouts have no hot prefix
         to maintain, so they keep their permutation and only re-upload.
+        ``hot_mask`` overrides the degree-based hot set — the visit
+        telemetry path (`refresh_hotness`) passes ``visit_hot_mask``.
         """
         decision = entry.decision
         entry.generation += 1
@@ -490,7 +603,8 @@ class EngineSession:
                               generation=entry.generation):
             if entry.hot_prefix_len > 0:
                 perm, inv, hot_len, _info = patch_permutation(
-                    entry.graph, entry.perm, entry.hot_prefix_len)
+                    entry.graph, entry.perm, entry.hot_prefix_len,
+                    hot_mask=hot_mask)
                 entry.perm, entry.inv_perm = perm, inv
                 entry.hot_prefix_len = hot_len
         entry.reorder_seconds = self.clock.now() - t0
@@ -503,7 +617,8 @@ class EngineSession:
             entry.handle = self.executor.prepare(
                 entry.served, backend=decision.backend,
                 canonical_ids=entry.inv_perm,
-                hot_prefix_fraction=decision.hot_prefix_fraction)
+                hot_prefix_fraction=decision.hot_prefix_fraction,
+                search=self._search_spec(entry))
         entry.bucket_shape = entry.handle.bucket
         entry.arrays = entry.handle.arrays
         self._c_patches.inc()
@@ -532,12 +647,14 @@ class EngineSession:
         if decision is None:
             volume = max(entry.queries_observed, entry.expected_queries)
             decision = self.policy.decide(entry.probes, volume)
+        visits = self._visits_for(entry)  # snapshot, like `graph`
 
         def _work():
             t0 = self.clock.now()
             with self.tracer.span("reorder", graph_id=gid,
                                   scheme=decision.scheme, background=True):
-                perm = np.asarray(self.policy.reorder_fn(decision)(graph))
+                perm = np.asarray(
+                    self.policy.reorder_fn(decision, visits=visits)(graph))
             secs = self.clock.now() - t0
             with self.scheduler._lock:
                 if entry.mutations != token:
@@ -576,6 +693,59 @@ class EngineSession:
                                  reorder_seconds=swap.reorder_seconds)
         self._c_swaps.inc()
         return True
+
+    # ---------------------------------------------- visit-driven hotness
+    def refresh_hotness(self, graph_id: str) -> dict:
+        """Fold accumulated visit telemetry back into a search layout.
+
+        Search graphs have uniform out-degree, so their skew lives in
+        *observed visit frequency* (docs/search.md). Every ``knn`` launch
+        folds per-vertex visit counts into the entry's EWMA; this call
+        closes the loop: it recomputes the visit-skew probes
+        (`registry.refresh_visit_probes`), re-runs the policy, and
+
+        - applies the new decision when it changed (typically
+          ``original`` -> ``visitsort`` once enough skew accumulates);
+        - otherwise re-packs the hot prefix against the *observed* hot
+          set via the patch tier (``patch_permutation`` with
+          ``visit_hot_mask``) — the steady-state drift correction, one
+          stable O(V) pass, no reorder;
+        - does nothing without telemetry or a hot prefix.
+
+        Runs under the scheduler fence so in-flight requests are served
+        under their pre-refresh generation. Returns a summary dict.
+        """
+        entry = self.registry.get(graph_id)
+        if entry.vectors is None:
+            raise ValueError(f"{graph_id!r} is not a search graph "
+                             "(register with vectors=)")
+        with self.scheduler.fence(graph_id):
+            probes = self.registry.refresh_visit_probes(graph_id)
+            volume = max(entry.queries_observed, entry.expected_queries)
+            decision = self.policy.decide(probes, volume)
+            if decision_changed(entry.decision, decision):
+                tier = "full"
+                with self.tracer.span("refresh_hotness", graph_id=graph_id,
+                                      tier=tier,
+                                      new_scheme=decision.scheme):
+                    self._apply_decision(entry, decision)
+            elif entry.visit_ewma is not None and entry.hot_prefix_len > 0:
+                tier = "patch"
+                with self.tracer.span("refresh_hotness", graph_id=graph_id,
+                                      tier=tier):
+                    self._apply_patch(
+                        entry,
+                        hot_mask=visit_hot_mask(self._visits_for(entry)))
+            else:
+                tier = "noop"
+        return {"graph_id": graph_id, "tier": tier,
+                "scheme": entry.decision.scheme,
+                "hotness_source": entry.decision.hotness_source,
+                "generation": entry.generation,
+                "hot_prefix_len": entry.hot_prefix_len,
+                "visit_queries": entry.visit_queries,
+                "visit_gini": entry.probes.visit_gini,
+                "reason": entry.decision.reason}
 
     # -------------------------------------------------------- re-decision
     def _maybe_redecide(self, entry: GraphEntry) -> dict | None:
@@ -704,11 +874,16 @@ class EngineSession:
         result already back in original id space plus the launch wall.
         """
         tracer = self.tracer
+        is_vec = kernel in VECTOR_SOURCE
         served_sources = None
         if kernel in MULTI_SOURCE:
             with tracer.span("translate", graph_id=entry.graph_id,
                              kernel=kernel, generation=entry.generation):
                 served_sources = entry.perm[sources].astype(np.int32)
+        elif is_vec:
+            # query vectors are not vertex ids — nothing to translate;
+            # the handle's SearchSpec already binds the served layout
+            served_sources = np.ascontiguousarray(sources, dtype=np.float32)
         # attribute the launch to compile vs cache hit through the
         # single backend's miss counter (sharded runners compile on
         # first use per kernel instead — annotated by the backend)
@@ -718,8 +893,12 @@ class EngineSession:
                          backend=entry.backend) as span_args:
             with self.profiler.step(kernel,
                                     step_num=self.scheduler.launches):
-                out = np.asarray(self.executor.run(entry.handle, kernel,
-                                                   served_sources))
+                out = self.executor.run(entry.handle, kernel,
+                                        served_sources)
+                if is_vec:
+                    ids, visits = np.asarray(out[0]), np.asarray(out[1])
+                else:
+                    out = np.asarray(out)
             if entry.backend == "single":
                 hit = self.executor.single.cache_misses == misses0
                 span_args["compile"] = "cache_hit" if hit else "compile"
@@ -727,6 +906,19 @@ class EngineSession:
         self.metrics_registry.histogram(
             "engine_launch_wall_seconds", "device wall per launch",
             kernel=kernel, backend=entry.backend).observe(wall)
+        if is_vec:
+            # visit counts arrive per served vertex; fold them back to
+            # original ids and into the registry's EWMA hotness estimate
+            # (the telemetry refresh_hotness folds into the layout)
+            self.registry.note_visits(entry.graph_id,
+                                      np.asarray(visits)[entry.perm],
+                                      num_queries=len(served_sources))
+            # neighbor ids are served ids (-1 = unfilled beam slot; guard
+            # the gather — a raw inv_perm[-1] would alias the last vertex)
+            result = np.where(ids >= 0,
+                              entry.inv_perm[np.maximum(ids, 0)],
+                              -1).astype(np.int64)
+            return result, wall
         # translate back: result for original vertex v lives at served
         # position perm[v]; component-label *values* (cc/ccsv) are served
         # ids and are canonicalized to min-original-id-per-component so
@@ -778,6 +970,7 @@ class EngineSession:
                     "mutations": e.mutations,
                     "probe_drift": round(e.probe_drift, 6),
                     "hot_prefix_len": e.hot_prefix_len,
+                    "visit_queries": e.visit_queries,
                     "ledger": e.ledger.as_dict() if e.ledger else None,
                 }
                 for gid, e in ((g, self.registry.get(g))

@@ -202,3 +202,64 @@ def test_redecision_count_is_capped(skewed_graph):
     for _ in range(30):
         session.submit(gid, "bfs", rng.integers(0, 1200, size=2))
     assert session.registry.get(gid).redecisions == 1
+
+
+# ------------------------------------------------- family-keyed fits (v2)
+def test_family_fit_matches_global_when_one_family_owns_the_data():
+    cal = StrengthCalibrator()
+    rng = np.random.default_rng(3)
+    for _ in range(40):
+        skew = rng.uniform(0.3, 0.9)
+        cal.observe("lorder", skew, 0.25 * skew, family="analytics")
+    # leave-one-family-out shrinkage: with a single family in play the
+    # family fit reduces *exactly* to the legacy global fit
+    assert cal.strength("lorder", family="analytics") == pytest.approx(
+        cal.strength("lorder"))
+    # a family with no observations inherits the global fit wholesale
+    assert cal.strength("lorder", family="search") == pytest.approx(
+        cal.strength("lorder"))
+
+
+def test_family_fits_diverge_with_mixed_evidence():
+    cal = StrengthCalibrator()
+    rng = np.random.default_rng(4)
+    for _ in range(60):   # visitsort converts skew well on search graphs,
+        skew = rng.uniform(0.3, 0.9)   # poorly on analytics ones
+        cal.observe("visitsort", skew, 0.7 * skew, family="search")
+        cal.observe("visitsort", skew, 0.1 * skew, family="analytics")
+    s_search = cal.strength("visitsort", family="search")
+    s_analytics = cal.strength("visitsort", family="analytics")
+    assert s_search > cal.strength("visitsort") > s_analytics
+    assert cal.count("visitsort", family="search") == 60
+    assert cal.count("visitsort") == 120
+    blob = cal.as_dict()
+    assert blob["families"]["search/visitsort"]["count"] == 60
+
+
+def test_family_calibration_save_load_round_trip(tmp_path):
+    cal = StrengthCalibrator()
+    cal.observe("visitsort", 0.6, 0.3, family="search")
+    cal.observe("dbg", 0.5, 0.2, family="analytics")
+    cal.observe("dbg", 0.5, 0.2)            # global-only sample
+    path = cal.save(tmp_path / "cal.json")
+    back = StrengthCalibrator.load(path)
+    for scheme, fam in (("visitsort", "search"), ("dbg", "analytics")):
+        assert back.strength(scheme, family=fam) == pytest.approx(
+            cal.strength(scheme, family=fam))
+        assert back.count(scheme, family=fam) == 1
+    assert back.count("dbg") == 2
+
+
+def test_load_pre_v2_blob_without_families(tmp_path):
+    import json
+    cal = StrengthCalibrator()
+    cal.observe("lorder", 0.5, 0.3, family="analytics")
+    path = cal.save(tmp_path / "cal.json")
+    blob = json.loads(path.read_text())
+    del blob["families"]                    # a pre-v2 save
+    path.write_text(json.dumps(blob))
+    back = StrengthCalibrator.load(path)
+    assert back.count("lorder") == 1
+    assert back.count("lorder", family="analytics") == 0
+    assert back.strength("lorder", family="analytics") == pytest.approx(
+        back.strength("lorder"))            # falls back to global

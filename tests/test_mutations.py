@@ -574,6 +574,52 @@ def test_update_graph_property_random_sequences(config):
 
 
 # -------------------------------------------------------- distributed leg
+# ------------------------------------------------- vertex growth (v2)
+def test_update_graph_add_vertices_grows_analytics_graph():
+    g = powerlaw_community(200, avg_degree=6.0, seed=11, name="grow")
+    session = _session()
+    gid = session.register(g, expected_queries=256)
+    n0 = g.num_vertices
+    summary = session.update_graph(
+        gid, add_edges=[[0, n0], [n0, 0], [n0, n0 + 1], [n0 + 1, n0]],
+        add_vertices=2)
+    assert summary["vertices_added"] == 2
+    entry = session.registry.get(gid)
+    assert entry.graph.num_vertices == n0 + 2
+    # grown ids join the layout as a cold identity tail, perm stays valid
+    assert len(entry.perm) == len(entry.inv_perm) == n0 + 2
+    assert entry.perm[entry.inv_perm].tolist() == list(range(n0 + 2))
+    # per-vertex metadata cannot extend to grown ids
+    assert entry.graph.communities is None
+    # grown vertices are served like any pre-existing source
+    depth = session.submit(gid, "bfs", [n0])
+    assert depth.shape == (1, n0 + 2)
+    assert depth[0][n0] == 0 and depth[0][0] == 1 and depth[0][n0 + 1] == 1
+    ref = _session()
+    rid = ref.register(entry.graph, graph_id="fresh", expected_queries=256)
+    _assert_matches("bfs", depth, ref.submit(rid, "bfs", [n0]))
+
+
+def test_update_graph_add_vertices_validation():
+    g = from_edges(6, [0, 1], [1, 2], name="vv")
+    session = _session()
+    gid = session.register(g, expected_queries=8)
+    with pytest.raises(ValueError):
+        apply_edge_delta(g, add_vertices=-1)
+    with pytest.raises(ValueError):   # removals cannot touch grown ids
+        session.update_graph(gid, add_edges=[[6, 0]],
+                             remove_edges=[[6, 0]], add_vertices=1)
+    with pytest.raises(ValueError):   # analytics graphs take no vectors
+        session.update_graph(gid, add_edges=[[0, 2]],
+                             vectors=np.zeros((1, 4), np.float32))
+    # pure vertex growth with no edges is a real (non-noop) mutation
+    gen0 = session.registry.get(gid).generation
+    summary = session.update_graph(gid, add_vertices=1)
+    assert summary["vertices_added"] == 1 and summary["tier"] != "noop"
+    assert session.registry.get(gid).generation == gen0 + 1
+    assert session.registry.get(gid).graph.num_vertices == 7
+
+
 def test_mutations_four_forced_devices():
     """Re-run this module on 4 forced host devices so the sharded configs
     exercise a genuine mesh (same recipe as test_scheduler.py)."""

@@ -302,8 +302,9 @@ def test_scheduler_telemetry_golden_schema(obs_graph):
     assert list(t) == SCHEDULER_TELEMETRY_KEYS
     assert t["admission"] is None          # none configured by default
     assert set(t["result_cache"]) == {"entries", "pinned", "max_entries",
+                                      "bytes", "max_bytes", "max_age_s",
                                       "hits", "misses", "evictions",
-                                      "hit_rate"}
+                                      "expired", "hit_rate"}
     top = session.telemetry()
     assert set(top) == {"executor", "scheduler", "policy", "calibration",
                         "redecisions", "mutations", "graphs"}

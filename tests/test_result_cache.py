@@ -213,3 +213,70 @@ def test_cache_interleaving_property(tiny_graph):
                             reference.submit(rid, kernel, sources))
 
     check()
+
+
+# -------------------------------------------- freshness + byte bounds (v2)
+def test_ttl_expiry_counts_and_reclaims():
+    t = {"now": 0.0}
+    c = ResultCache(max_entries=8, max_age_s=1.0, clock=lambda: t["now"])
+    c.put("g", 0, "bfs", 1, _row(1))
+    c.put("g", 0, "bfs", 2, _row(2), pinned=True)
+    assert c.get("g", 0, "bfs", 1) is not None
+    t["now"] = 1.5
+    assert c.get("g", 0, "bfs", 1) is None   # stale reads as a miss
+    assert c.get("g", 0, "bfs", 2) is None   # pinning != freshness
+    assert c.expired == 2 and c.misses == 2 and c.hits == 1
+    assert c.entries == 0 and c.resident_bytes == 0
+    st = c.stats()
+    assert st["max_age_s"] == 1.0 and st["expired"] == 2
+
+
+def test_ttl_rewrite_restamps_the_entry():
+    t = {"now": 0.0}
+    c = ResultCache(max_age_s=1.0, clock=lambda: t["now"])
+    c.put("g", 0, "bfs", 1, _row(1))
+    t["now"] = 0.8
+    c.put("g", 0, "bfs", 1, _row(1))
+    t["now"] = 1.5                           # 1.5 - 0.8 is inside the TTL
+    assert c.get("g", 0, "bfs", 1) is not None
+
+
+def test_max_bytes_evicts_cold_lru_only():
+    nb = _row(0).nbytes
+    c = ResultCache(max_entries=100, max_bytes=3 * nb)
+    c.put("g", 0, "bfs", 0, _row(0), pinned=True)
+    for sid in (1, 2, 3):
+        c.put("g", 0, "bfs", sid, _row(sid))
+    assert c.resident_bytes <= 3 * nb
+    assert c.get("g", 0, "bfs", 0) is not None   # pinned is untouchable
+    assert c.get("g", 0, "bfs", 1) is None       # oldest cold row evicted
+    assert c.get("g", 0, "bfs", 3) is not None
+    assert c.evictions == 1
+    assert c.stats()["max_bytes"] == 3 * nb
+
+
+def test_cache_bound_validation():
+    with pytest.raises(ValueError):
+        ResultCache(max_age_s=0)
+    with pytest.raises(ValueError):
+        ResultCache(max_bytes=0)
+
+
+def test_session_wires_ttl_and_byte_bounds(plc_graph):
+    from repro.engine import ManualClock
+    clock = ManualClock()
+    session = _session(result_cache_max_age_s=10.0,
+                       result_cache_max_bytes=1 << 20, clock=clock)
+    assert session.result_cache.max_age_s == 10.0
+    assert session.result_cache.max_bytes == 1 << 20
+    gid = session.register(plc_graph, expected_queries=256)
+    want = session.submit(gid, "pr")
+    hits0 = session.result_cache.hits
+    _assert_matches("pr", session.submit(gid, "pr"), want)  # fresh: a hit
+    assert session.result_cache.hits == hits0 + 1
+    clock.advance(11.0)
+    exp0 = session.result_cache.expired
+    _assert_matches("pr", session.submit(gid, "pr"), want)  # recomputed
+    assert session.result_cache.expired == exp0 + 1
+    stats = session.telemetry()["scheduler"]["result_cache"]
+    assert stats["max_age_s"] == 10.0 and stats["max_bytes"] == 1 << 20
